@@ -1,0 +1,63 @@
+"""Benchmark harness entry (deliverable (d)): one bench per paper table.
+
+  table1  operator MBU, fused vs unfused        (paper §3.1, Table 1)
+  table2  E2E step, sparse vs overall           (paper §3.2, Table 2)
+  roofline summarize dry-run roofline terms     (paper Fig. 2/3; §Roofline)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table2,roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _roofline_summary():
+    """Aggregate reports/dryrun/*.json into the §Roofline table."""
+    rep = pathlib.Path(__file__).resolve().parents[1] / "reports" / "dryrun"
+    rows = []
+    for p in sorted(rep.glob("*.json")):
+        d = json.loads(p.read_text())
+        if not d.get("ok") or d.get("tag"):
+            continue
+        r = d["roofline"]
+        rows.append((d["arch"], d["shape"], d["mesh"], r))
+    print("=" * 110)
+    print("Roofline terms per (arch × shape × mesh) — from compiled dry-run "
+          "(see EXPERIMENTS.md §Roofline)")
+    print("=" * 110)
+    hdr = (f"{'arch':22s} {'shape':15s} {'mesh':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'bound':>10s} {'step_ms':>10s} "
+           f"{'MF/HLO':>7s} {'roofl%':>7s}")
+    print(hdr)
+    for arch, shape, mesh, r in rows:
+        print(f"{arch:22s} {shape:15s} {mesh:8s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} {r['bound']:>10s} "
+              f"{r['step_s_lower_bound']*1e3:10.3f} {r['useful_flops_ratio']:7.3f} "
+              f"{100*r.get('roofline_fraction', 0):6.1f}%")
+    return rows
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="table1,table2,roofline")
+    args = p.parse_args(argv)
+    which = set(args.only.split(","))
+
+    if "table1" in which:
+        from benchmarks import table1_operators
+
+        table1_operators.run()
+    if "table2" in which:
+        from benchmarks import table2_e2e
+
+        table2_e2e.run()
+    if "roofline" in which:
+        _roofline_summary()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

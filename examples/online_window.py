@@ -1,0 +1,139 @@
+"""Online-learning windows with stale-feature eviction (paper §2.1
+Pipelines + Embedding Engine eviction; §4.2 continuous training).
+
+Simulates a day of hourly windows with DRIFTING id distributions (new items
+appear, old ones expire — the recommendation regime the conflict-free
+dynamic embedding exists for). For each window:
+  1. evaluate on the incoming window BEFORE training it (one-pass protocol),
+  2. train on it,
+  3. evict embedding rows idle for > evict_age steps.
+
+Run:  PYTHONPATH=src python examples/online_window.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding_engine import EmbeddingEngine, EngineConfig
+from repro.core.feature_engine import FeatureEngine, FeatureSpec
+from repro.io.ragged import Ragged
+from repro.models.layers import MIXED, make_mlp, mlp_apply
+from repro.optim import adamw
+from repro.optim.sparse_adam import SparseAdamConfig
+from repro.pipelines import OnlineWindowPipeline, TrainConfig, Trainer
+
+DIM = 16
+BATCH = 128
+ITEMS_PER_WINDOW = 400     # each window introduces new hot items
+
+SPECS = [
+    FeatureSpec("user", transform="hash", emb_dim=DIM),
+    FeatureSpec("item", transform="hash", emb_dim=DIM),
+    FeatureSpec("label", transform="raw"),
+]
+
+
+class Cell:
+    returns_state = True
+    donate_state = False
+
+    def __init__(self):
+        self.fe = FeatureEngine(SPECS)
+        self.engine = EmbeddingEngine(
+            [s for s in SPECS if s.emb_dim],
+            EngineConfig(mesh_axes=(), n_devices=1, rows_per_shard=4096,
+                         map_capacity_per_shard=8192, u_budget=512,
+                         per_dest_cap=512, recv_budget=512))
+        self.mlp = make_mlp(jax.random.PRNGKey(0), (2 * DIM, 32, 1))
+        self.step_fn = self._step(train=True)
+        self.eval_fn = jax.jit(self._step(train=False))
+
+    def _step(self, train: bool):
+        fe, engine = self.fe, self.engine
+
+        def fn(state, batch):
+            step = state["step"] + 1
+            ids, _ = fe.apply(batch)
+            sp, rows_r, plans, _ = engine.fetch_local(state["sparse"], ids, step,
+                                                      train=train)
+            label = batch["label"].values.reshape(BATCH)
+
+            def loss_fn(dense, rows_r):
+                acts = engine.activations(rows_r, plans, ids)
+                x = jnp.concatenate([acts["user"], acts["item"]], axis=1)
+                logits = mlp_apply(dense, x.astype(jnp.float32), MIXED).reshape(BATCH)
+                return jnp.mean(jnp.maximum(logits, 0) - logits * label
+                                + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+            if not train:
+                return {"loss": loss_fn(state["dense"], rows_r)}
+            loss, (gd, grows) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                state["dense"], rows_r)
+            dense, opt = adamw.update(adamw.AdamWConfig(lr=1e-3), state["dense"],
+                                      gd, state["opt"], step)
+            sp = engine.update_local(sp, plans, grows, SparseAdamConfig(lr=5e-2), step)
+            return ({"step": step, "dense": dense, "opt": opt, "sparse": sp},
+                    {"loss": loss, "live_rows": _live(sp)})
+
+        return fn
+
+    def init_state(self):
+        return {"step": jnp.int32(0), "dense": self.mlp,
+                "opt": adamw.init(self.mlp),
+                "sparse": jax.tree.map(lambda x: x[0], self.engine.init_state())}
+
+
+def _live(sparse_state):
+    return sum(v["idmap"].occupied.sum(dtype=jnp.int32)
+               for v in sparse_state.values())
+
+
+def make_window_batch(window: int, i: int):
+    """Window w draws items from [w·K, (w+1)·K) — full distribution drift."""
+    r = np.random.default_rng(1000 * window + i)
+    items = r.integers(window * ITEMS_PER_WINDOW, (window + 1) * ITEMS_PER_WINDOW,
+                       BATCH)
+    users = r.integers(0, 2000, BATCH)
+    # ground truth: item parity (directly learnable from the item embedding)
+    label = (items % 2).astype(np.float32)
+    return {
+        "user": Ragged.from_lists([[int(u)] for u in users], nnz_budget=BATCH),
+        "item": Ragged.from_lists([[int(x)] for x in items], nnz_budget=BATCH),
+        "label": Ragged.from_lists([[float(l)] for l in label],
+                                   nnz_budget=BATCH, dtype=jnp.float32),
+    }
+
+
+def main():
+    cell = Cell()
+    engine = cell.engine
+
+    def evict_fn(state, older_than):
+        sp, met = engine.evict_local(state["sparse"], jnp.int32(older_than))
+        print(f"    evicted {int(sum(met.values()))} stale rows "
+              f"(live now: {int(_live(sp))})")
+        return {**state, "sparse": sp}
+
+    trainer = Trainer(cell, TrainConfig(total_steps=0, watchdog=False,
+                                        log_every=20, evict_age_steps=150),
+                      evict_fn=evict_fn)
+    pipe = OnlineWindowPipeline(
+        trainer,
+        make_window_iter=lambda w: (make_window_batch(w, i % 20) for i in range(120)),
+        eval_step=lambda st, b: cell.eval_fn(st, b),
+        steps_per_window=120)
+
+    state = cell.init_state()
+    state, results = pipe.run(state, n_windows=5)
+    print("\nwindow | pre-train eval loss | post-train loss")
+    for r in results:
+        post = r.train_metrics[-1]["loss"] if r.train_metrics else float("nan")
+        print(f"  {r.window}    |       {r.pre_eval.get('loss', float('nan')):.4f}"
+              f"        |    {post:.4f}")
+    print("\nPre-eval is ~0.69+ on every window (unseen drifted items) while "
+          "post-train drops — the engine keeps absorbing new ids; eviction "
+          "keeps the live-row count bounded.")
+
+
+if __name__ == "__main__":
+    main()

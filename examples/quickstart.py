@@ -1,0 +1,99 @@
+"""Quickstart: the RecIS unified sparse–dense step in ~80 lines.
+
+Builds a tiny CTR model straight from the public API:
+  FeatureSpecs → FeatureEngine (fused transforms)
+               → EmbeddingEngine (conflict-free KV embedding)
+               → dense MLP (bf16) → loss → SparseAdam + AdamW.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding_engine import EmbeddingEngine, EngineConfig
+from repro.core.feature_engine import FeatureEngine, FeatureSpec
+from repro.io.ragged import Ragged
+from repro.models.layers import MIXED, make_mlp, mlp_apply
+from repro.optim import adamw
+from repro.optim.sparse_adam import SparseAdamConfig
+
+# ---------------------------------------------------------------- features
+SPECS = [
+    FeatureSpec("user_id", transform="hash", emb_dim=16),
+    FeatureSpec("item_id", transform="hash", emb_dim=16),
+    FeatureSpec("price", transform="bucketize", emb_dim=16,
+                boundaries=tuple(np.linspace(0, 100, 17))),
+    FeatureSpec("clicks", transform="hash", emb_dim=16, pooling="mean"),  # multi-value
+    FeatureSpec("label", transform="raw"),
+]
+
+fe = FeatureEngine(SPECS)
+engine = EmbeddingEngine(
+    [s for s in SPECS if s.emb_dim],
+    EngineConfig(mesh_axes=(), n_devices=1, rows_per_shard=4096,
+                 map_capacity_per_shard=8192, u_budget=512,
+                 per_dest_cap=512, recv_budget=512))
+
+# ------------------------------------------------------------------ model
+BATCH = 128
+mlp = make_mlp(jax.random.PRNGKey(0), (4 * 16, 64, 32, 1))
+
+
+def make_batch(seed: int):
+    r = np.random.default_rng(seed)
+    return {
+        "user_id": Ragged.from_lists([[int(x)] for x in r.zipf(1.3, BATCH)],
+                                     nnz_budget=BATCH),
+        "item_id": Ragged.from_lists([[int(x)] for x in r.zipf(1.2, BATCH)],
+                                     nnz_budget=BATCH),
+        "price": Ragged.from_lists([[float(x)] for x in r.uniform(0, 100, BATCH)],
+                                   nnz_budget=BATCH, dtype=jnp.float32),
+        "clicks": Ragged.from_lists(
+            [list(r.integers(0, 1000, r.integers(0, 6))) for _ in range(BATCH)],
+            nnz_budget=BATCH * 5),
+        "label": Ragged.from_lists([[float(x)] for x in r.integers(0, 2, BATCH)],
+                                   nnz_budget=BATCH, dtype=jnp.float32),
+    }
+
+
+@jax.jit
+def train_step(sparse_state, dense, opt, batch, step):
+    ids, _ = fe.apply(batch)                                        # fused transforms
+    sparse_state, rows_r, plans, metrics = engine.fetch_local(      # KV fetch
+        sparse_state, ids, step)
+    label = batch["label"].values.reshape(BATCH)
+
+    def loss_fn(dense, rows_r):
+        acts = engine.activations(rows_r, plans, ids)               # pooled, differentiable
+        x = jnp.concatenate([acts["user_id"], acts["item_id"],
+                             acts["price"], acts["clicks"]], axis=1)
+        logits = mlp_apply(dense, x, MIXED).reshape(BATCH)
+        return jnp.mean(
+            jnp.maximum(logits, 0) - logits * label
+            + jnp.log1p(jnp.exp(-jnp.abs(logits)))), acts
+
+    (loss, _), (gd, grows) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(dense, rows_r)
+    dense, opt = adamw.update(adamw.AdamWConfig(lr=1e-3), dense, gd, opt, step)
+    sparse_state = engine.update_local(sparse_state, plans, grows,   # row-wise Adam
+                                       SparseAdamConfig(lr=1e-2), step)
+    return sparse_state, dense, opt, loss, metrics
+
+
+def main():
+    sparse_state = jax.tree.map(lambda x: x[0], engine.init_state())
+    dense, opt = mlp, adamw.init(mlp)
+    for step in range(1, 101):
+        batch = make_batch(step % 10)
+        sparse_state, dense, opt, loss, met = train_step(
+            sparse_state, dense, opt, batch, jnp.int32(step))
+        if step % 20 == 0:
+            print(f"step {step:4d} loss={float(loss):.4f} "
+                  f"inserted={int(met['dim16/idmap_inserted'])}")
+    print("quickstart done — loss should be well below 0.693 (random).")
+    assert float(loss) < 0.67
+
+
+if __name__ == "__main__":
+    main()

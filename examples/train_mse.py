@@ -1,0 +1,169 @@
+"""End-to-end driver (deliverable (b)): the paper's MSE-like search-ranking
+model trained for a few hundred steps through the FULL RecIS stack:
+
+  datagen → ColumnIO table on disk
+          → AsyncLoader (multi-threaded prefetch, sharded)
+          → FeatureEngine (fused hash/bucketize, ~600 columns → 3 ops)
+          → EmbeddingEngine (conflict-free KV, merged by dim)
+          → cross-attention over behavior sequences + 5-layer DNN (bf16)
+          → SparseAdam (rows) + AdamW (dense), ZeRO-less single host
+          → AsyncSaver checkpoints + resume
+
+On a TPU pod the same script runs under `launch/train.py`'s production
+mesh; the model here is width-reduced for CPU (full configs are compile-
+validated by the dry-run).
+
+Run:  PYTHONPATH=src python examples/train_mse.py [--steps 300] [--resume]
+"""
+import argparse
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding_engine import EmbeddingEngine, EngineConfig
+from repro.core.feature_engine import FeatureEngine, FeatureSpec
+from repro.io import datagen
+from repro.io.columnio import AsyncLoader
+from repro.models.layers import MIXED, make_dense, make_mlp, dense_apply, mlp_apply
+from repro.optim import adamw
+from repro.optim.sparse_adam import SparseAdamConfig
+from repro.pipelines import TrainConfig, Trainer
+
+DIM = 8
+N_HASH, N_BUCKET, N_SEQ = 40, 20, 4   # "MSE-like", scaled for CPU
+SEQ_LEN = 8
+BATCH = 128
+
+
+def specs():
+    out = [FeatureSpec(f"h{i}", transform="hash", emb_dim=DIM) for i in range(N_HASH)]
+    out += [FeatureSpec(f"b{i}", transform="bucketize", emb_dim=DIM,
+                        boundaries=tuple(np.linspace(-2, 2, 17)))
+            for i in range(N_BUCKET)]
+    out += [FeatureSpec(f"s{i}", transform="hash", emb_dim=DIM, pooling="none",
+                        max_len=SEQ_LEN) for i in range(N_SEQ)]
+    out += [FeatureSpec("query", transform="hash", emb_dim=DIM),
+            FeatureSpec("label", transform="raw")]
+    return out
+
+
+class MSECell:
+    """Adapts the MSE model to the Trainer's (state, batch) → ... contract."""
+
+    returns_state = True
+    donate_state = True
+
+    def __init__(self):
+        self.specs = specs()
+        self.fe = FeatureEngine(self.specs)
+        self.engine = EmbeddingEngine(
+            [s for s in self.specs if s.emb_dim],
+            EngineConfig(mesh_axes=(), n_devices=1, rows_per_shard=1 << 14,
+                         map_capacity_per_shard=1 << 15, u_budget=2048,
+                         per_dest_cap=2048, recv_budget=2048))
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+        d_flat = (N_HASH + N_BUCKET + 1) * DIM + DIM  # non-seq + query + interest
+        self.init_dense = {
+            "attn_q": make_dense(k1, DIM, DIM),        # query → attention space
+            "attn_k": make_dense(k2, DIM, DIM),
+            "dnn": make_mlp(k3, (d_flat, 64, 64, 32, 32, 1)),  # 5-layer DNN
+        }
+        self.step_fn = self._make_step()
+
+    def _make_step(self):
+        fe, engine = self.fe, self.engine
+        sspecs = self.specs
+
+        def step_fn(state, batch):
+            step = state["step"] + 1
+            ids, _ = fe.apply(batch)
+            sp, rows_r, plans, met = engine.fetch_local(state["sparse"], ids, step)
+            label = batch["label"].values.reshape(BATCH)
+
+            def loss_fn(dense, rows_r):
+                acts = engine.activations(rows_r, plans, ids)
+                # cross-attention: query embedding attends over each sequence
+                q = dense_apply(dense["attn_q"], acts["query"], MIXED)  # (B, D)
+                interests = []
+                for i in range(N_SEQ):
+                    seq = acts[f"s{i}"]                                 # (B, L, D)
+                    k = dense_apply(dense["attn_k"], seq, MIXED)
+                    a = jax.nn.softmax(
+                        jnp.einsum("bd,bld->bl", q, k).astype(jnp.float32)
+                        / np.sqrt(DIM), axis=-1)
+                    interests.append(jnp.einsum("bl,bld->bd", a.astype(seq.dtype), seq))
+                interest = sum(interests) / N_SEQ
+                flat = [acts[s.name] for s in sspecs
+                        if s.emb_dim and s.pooling == "sum"]
+                x = jnp.concatenate(flat + [interest], axis=1).astype(jnp.float32)
+                logits = mlp_apply(dense["dnn"], x, MIXED).reshape(BATCH)
+                bce = jnp.mean(jnp.maximum(logits, 0) - logits * label
+                               + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+                return bce
+
+            loss, (gd, grows) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                state["dense"], rows_r)
+            dense, opt = adamw.update(adamw.AdamWConfig(lr=1e-3),
+                                      state["dense"], gd, state["opt"], step)
+            sp = engine.update_local(sp, plans, grows, SparseAdamConfig(lr=1e-2), step)
+            return ({"step": step, "dense": dense, "opt": opt, "sparse": sp},
+                    {"loss": loss, **{k: v for k, v in met.items()
+                                      if "overflow" in k}})
+
+        return step_fn
+
+    def init_state(self):
+        return {"step": jnp.int32(0), "dense": self.init_dense,
+                "opt": adamw.init(self.init_dense),
+                "sparse": jax.tree.map(lambda x: x[0], self.engine.init_state())}
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--rows", type=int, default=4096)
+    p.add_argument("--workdir", default=None)
+    p.add_argument("--resume", action="store_true")
+    args = p.parse_args()
+
+    workdir = pathlib.Path(args.workdir or tempfile.mkdtemp(prefix="recis_mse_"))
+    cell = MSECell()
+
+    # 1) synthesize the training table (stands in for the production DFS)
+    table = workdir / "table"
+    if not table.exists():
+        gens = datagen.gen_for_specs(cell.specs, seq_mean_len=4.0)
+        datagen.write_table(table, gens, n_rows=args.rows, rows_per_group=1024)
+        print(f"wrote table: {table} ({args.rows} rows)")
+
+    # 2) async sharded loader with static budgets
+    bspec = datagen.batch_spec_for(cell.specs, BATCH)
+    loader = AsyncLoader(table, bspec, n_threads=2, loop=True)
+
+    # 3) trainer with checkpoint/resume + straggler watchdog
+    tcfg = TrainConfig(total_steps=args.steps, ckpt_dir=str(workdir / "ckpt"),
+                       ckpt_every=100, resume=args.resume, log_every=25)
+    trainer = Trainer(cell, tcfg)
+    state = cell.init_state()
+    state, start, cursor = trainer.try_resume(state)
+    if start:
+        print(f"resumed from step {start}")
+    res = trainer.run(state, iter(loader), start_step=start,
+                      cursor_fn=lambda: loader.cursor)
+    loader.stop()
+
+    for m in res.metrics_history:
+        print(f"step {m['step']:4d} loss={m['loss']:.4f} wall={m['wall_s']*1e3:.1f}ms"
+              + (" STRAGGLER" if m.get("straggler") else ""))
+    print(f"\nio overflow (budget truncations): {loader.overflow}")
+    print(f"straggler events: {len(res.straggler_events)}")
+    first, last = res.metrics_history[0]["loss"], res.metrics_history[-1]["loss"]
+    print(f"loss {first:.4f} → {last:.4f} over {res.steps_run} steps "
+          f"(ckpts in {workdir/'ckpt'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Regenerate EXPERIMENTS.md tables from reports/dryrun/*.json.
+
+Patches the regions between <!-- BEGIN:<name> --> / <!-- END:<name> -->
+markers: dryrun, roofline, perf. Run after any dry-run refresh:
+  PYTHONPATH=src python reports/gen_tables.py
+"""
+import json
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+REP = ROOT / "reports" / "dryrun"
+MD = ROOT / "EXPERIMENTS.md"
+
+
+def load(tag_filter=None):
+    rows = []
+    for p in sorted(REP.glob("*.json")):
+        d = json.loads(p.read_text())
+        if not d.get("ok"):
+            continue
+        tag = d.get("tag") or ""
+        if tag_filter is None and tag:
+            continue
+        if tag_filter is not None and tag not in tag_filter:
+            continue
+        rows.append(d)
+    return rows
+
+
+def dryrun_table():
+    out = ["| arch | shape | mesh | peak GiB/chip | HLO TFLOP/chip (scan=1 layer) | coll GiB/chip | #coll | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    rows = []
+    for d in load():
+        m = d["memory_analysis_per_device"]
+        c = d["collectives_per_device_raw"]
+        rows.append((d["arch"], d["shape"], d["mesh"],
+                     m.get("peak_memory_in_bytes", 0) / 2**30,
+                     d["cost_analysis_per_device_raw"].get("flops", 0) / 1e12,
+                     c["total"] / 2**30, c["count"], d["seconds"]["compile"]))
+    for a, s, m, peak, fl, cg, cc, cs in sorted(rows):
+        out.append(f"| {a} | {s} | {m} | {peak:.2f} | {fl:.2f} | {cg:.3f} | {cc} | {cs:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table():
+    out = ["| arch | shape | mesh | compute_s | memory_s | coll_s | bound | step≥(ms) | MF/HLO | roofline% |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    rows = []
+    for d in load():
+        r = d["roofline"]
+        rows.append((d["arch"], d["shape"], d["mesh"], r))
+    for a, s, m, r in sorted(rows, key=lambda x: (x[0], x[1], x[2])):
+        out.append(f"| {a} | {s} | {m} | {r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+                   f"{r['collective_s']:.4f} | {r['bound']} | "
+                   f"{r['step_s_lower_bound']*1e3:.2f} | {r['useful_flops_ratio']:.3f} | "
+                   f"{100*r.get('roofline_fraction', 0):.1f}% |")
+    return "\n".join(out)
+
+
+def perf_table():
+    cells = [("granite-20b", "train_4k", ["sp", "dots", "ce", "combo"]),
+             ("internlm2-20b", "train_4k", ["sp", "dots", "ce", "combo"]),
+             ("dlrm-mlperf", "train_batch", ["slack15", "slack10"])]
+    out = ["| cell | variant | compute_s | memory_s | coll_s | step≥(ms) | Δstep vs base |",
+           "|---|---|---|---|---|---|---|"]
+    for arch, shape, tags in cells:
+        base = None
+        for tag in [""] + tags:
+            name = REP / f"{arch}_{shape}_16x16{'_' + tag if tag else ''}.json"
+            if not name.exists():
+                continue
+            d = json.loads(name.read_text())
+            if not d.get("ok"):
+                continue
+            r = d["roofline"]
+            step = r["step_s_lower_bound"] * 1e3
+            if tag == "":
+                base = step
+                delta = "—"
+            else:
+                delta = f"{100*(step-base)/base:+.1f}%" if base else "?"
+            out.append(f"| {arch}×{shape} | {tag or 'BASELINE'} | {r['compute_s']:.3f} | "
+                       f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {step:.1f} | {delta} |")
+    return "\n".join(out)
+
+
+def patch(md: str, name: str, content: str) -> str:
+    begin, end = f"<!-- BEGIN:{name} -->", f"<!-- END:{name} -->"
+    pat = re.compile(re.escape(begin) + r".*?" + re.escape(end), re.S)
+    assert pat.search(md), f"markers for {name} not found"
+    return pat.sub(begin + "\n" + content + "\n" + end, md)
+
+
+if __name__ == "__main__":
+    md = MD.read_text()
+    md = patch(md, "dryrun", dryrun_table())
+    md = patch(md, "roofline", roofline_table())
+    md = patch(md, "perf", perf_table())
+    MD.write_text(md)
+    print("EXPERIMENTS.md tables refreshed")

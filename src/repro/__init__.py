@@ -1,0 +1,13 @@
+"""repro — RecIS (unified sparse–dense training) reimplemented in JAX for TPU.
+
+Feature IDs are 64-bit (the conflict-free IDMap stores full int64 keys), so
+x64 is enabled — but default dtypes stay 32-bit (`jax_default_dtype_bits`)
+so the dense path remains fp32/bf16 exactly as the paper's mixed-precision
+policy prescribes. This import must run before any jax array is created.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+jax.config.update("jax_default_dtype_bits", "32")
+
+__version__ = "1.0.0"

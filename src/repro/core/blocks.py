@@ -1,0 +1,85 @@
+"""Blocks — tier-2 of the RecIS Embedding Engine (§2.2.2).
+
+Contiguous row-sharded storage for embedding parameters *and* their
+optimizer slot variables. A Blocks instance holds one merged logical table
+(all features sharing an embedding dim — the paper's Parameter Aggregation)
+for one device shard. Row 0 is the reserved overflow bucket (see idmap.py).
+
+Rows are addressed by the offsets IDMap hands out. New rows are initialized
+deterministically from the feature id (stateless hash-PRNG), so elastic
+re-sharding and restarts reproduce identical values without threading PRNG
+keys through the training step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.feature_engine import splitmix64
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Blocks:
+    emb: jax.Array               # (n_rows, dim) fp32 — paper: sparse stays fp32
+    slots: dict[str, jax.Array]  # optimizer slot vars, each (n_rows, dim) fp32
+
+    def tree_flatten(self):
+        names = tuple(sorted(self.slots))
+        return (self.emb, tuple(self.slots[k] for k in names)), names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        emb, slot_vals = children
+        return cls(emb=emb, slots=dict(zip(names, slot_vals)))
+
+    @property
+    def n_rows(self) -> int:
+        return self.emb.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.emb.shape[1]
+
+
+def create(n_rows: int, dim: int, slot_names: tuple[str, ...] = ("m", "v")) -> Blocks:
+    return Blocks(
+        emb=jnp.zeros((n_rows, dim), jnp.float32),
+        slots={k: jnp.zeros((n_rows, dim), jnp.float32) for k in slot_names},
+    )
+
+
+def _hash_uniform(ids: jax.Array, dim: int) -> jax.Array:
+    """Deterministic per-(id, column) uniform in [-1, 1), from splitmix64."""
+    cols = jnp.arange(dim, dtype=jnp.uint64)[None, :]
+    bits = splitmix64(ids.astype(jnp.uint64)[:, None] * jnp.uint64(0x9E3779B97F4A7C15) + cols)
+    u01 = (bits >> jnp.uint64(40)).astype(jnp.float32) * np.float32(2.0**-24)
+    return u01 * 2.0 - 1.0
+
+
+def init_rows(
+    b: Blocks, offsets: jax.Array, ids: jax.Array, is_new: jax.Array, scale: float | None = None
+) -> Blocks:
+    """Initialize newly-allocated rows: emb ← uniform(±1/sqrt(dim)), slots ← 0."""
+    s = np.float32(scale if scale is not None else 1.0 / np.sqrt(b.dim))
+    init = _hash_uniform(ids, b.dim) * s
+    dst = jnp.where(is_new, offsets, b.n_rows)  # out-of-range → dropped
+    emb = b.emb.at[dst].set(init, mode="drop")
+    slots = {k: v.at[dst].set(0.0, mode="drop") for k, v in b.slots.items()}
+    return Blocks(emb=emb, slots=slots)
+
+
+def gather(b: Blocks, offsets: jax.Array) -> jax.Array:
+    """Fetch rows (the paper's `gather`; Pallas fast path in kernels/)."""
+    return b.emb[offsets]
+
+
+def clear_rows(b: Blocks, offsets: jax.Array, mask: jax.Array) -> Blocks:
+    """Zero rows being evicted so stale state can't leak into a reused row."""
+    dst = jnp.where(mask, offsets, b.n_rows)
+    emb = b.emb.at[dst].set(0.0, mode="drop")
+    slots = {k: v.at[dst].set(0.0, mode="drop") for k, v in b.slots.items()}
+    return Blocks(emb=emb, slots=slots)

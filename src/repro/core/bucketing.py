@@ -1,0 +1,39 @@
+"""Static-capacity bucketing — shared routing primitive.
+
+Given per-item destination keys, compute each item's (bucket, position)
+under a fixed per-bucket capacity, TPU-style (sort + searchsorted, no
+atomics). Used by the MoE EP dispatch; the embedding exchange uses the same
+pattern inline (core/exchange.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bucketize(keys: jax.Array, n_buckets: int, cap: int):
+    """keys: (N,) int32 in [0, n_buckets) or >= n_buckets for "drop".
+
+    Returns (bucket, pos, ok): item i belongs at [bucket[i], pos[i]] and
+    ok[i] says it fit under the capacity. Stable within a bucket.
+    """
+    n = keys.shape[0]
+    order = jnp.argsort(keys, stable=True)
+    sk = keys[order]
+    start = jnp.searchsorted(sk, jnp.arange(n_buckets, dtype=sk.dtype))
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - start[
+        jnp.clip(sk, 0, n_buckets - 1)
+    ].astype(jnp.int32)
+    ok_sorted = (sk < n_buckets) & (pos_sorted < cap)
+    bucket = jnp.zeros((n,), jnp.int32).at[order].set(sk.astype(jnp.int32))
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+    ok = jnp.zeros((n,), jnp.bool_).at[order].set(ok_sorted)
+    return bucket, pos, ok
+
+
+def scatter_to_buckets(values: jax.Array, bucket, pos, ok, n_buckets: int, cap: int, fill=0):
+    """values: (N, ...) → (n_buckets, cap, ...) with `fill` in empty slots."""
+    out_shape = (n_buckets, cap) + values.shape[1:]
+    dst_b = jnp.where(ok, bucket, n_buckets)
+    out = jnp.full(out_shape, fill, dtype=values.dtype)
+    return out.at[dst_b, pos].set(values, mode="drop")

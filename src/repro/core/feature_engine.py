@@ -1,0 +1,276 @@
+"""Feature Engine — fused feature transforms (RecIS §2.1, §2.2.2).
+
+The paper's headline fusion result: an MSE model with >600 per-column
+feature-transform ops is collapsed into ~3 fused ops, one per transform
+*type*. We reproduce that exactly: columns are grouped by transform kind,
+their CSR value buffers are concatenated with a per-value column id, and a
+single vectorized op handles the whole group. Per-column parameters
+(vocab sizes, hash salts, bucket boundaries) become lookup tables indexed
+by column id — this is what turns N kernel launches into one.
+
+Transforms (paper §2.1 Feature Engine + §3.2.1 MSE):
+  hash       string/int64 → int64 id (splitmix64 mixing, salted per column)
+  mod        id → id mod vocab_size[column]
+  bucketize  float → bucket index via per-column boundaries (searchsorted)
+  raw        float passthrough (dense side input)
+  cross      hash-combine ids of two columns, per-row cartesian (capped)
+  truncate   sequence head-truncation (Ragged.truncate)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.io.ragged import Ragged
+
+U64 = jnp.uint64
+
+_SPLITMIX_C1 = np.uint64(0x9E3779B97F4A7C15)
+_SPLITMIX_C2 = np.uint64(0xBF58476D1CE4E5B9)
+_SPLITMIX_C3 = np.uint64(0x94D049BB133111EB)
+
+
+def splitmix64(x: jax.Array) -> jax.Array:
+    """Stateless 64-bit mixer (Steele et al.); uniform enough that hash-mod
+    binning is LLN-balanced across shards (paper §2.2.2 Load Balancing)."""
+    z = x.astype(U64) + _SPLITMIX_C1
+    z = (z ^ (z >> np.uint64(30))) * _SPLITMIX_C2
+    z = (z ^ (z >> np.uint64(27))) * _SPLITMIX_C3
+    return z ^ (z >> np.uint64(31))
+
+
+def hash_combine(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Order-sensitive combine for feature crossing."""
+    return splitmix64(a.astype(U64) ^ (splitmix64(b) + _SPLITMIX_C1))
+
+
+def _fnv1a(name: str) -> int:
+    """Deterministic 31-bit string hash (restart/process independent)."""
+    h = 1469598103934665603
+    for ch in name.encode():
+        h = ((h ^ ch) * 1099511628211) & 0xFFFFFFFFFFFFFFFF
+    return h & 0x7FFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+POOLINGS = ("sum", "mean", "none", "tile", "values")  # values = per-id rows, no pooling (LM tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureSpec:
+    """One input column and how it becomes a model input."""
+
+    name: str
+    transform: str = "hash"          # hash | mod | bucketize | raw | cross
+    emb_dim: int | None = None        # None => raw numeric (dense side)
+    pooling: str = "sum"              # sum | mean | none (sequence) | tile
+    tile_k: int = 0                   # for pooling == "tile"
+    vocab_size: int | None = None     # for mod
+    boundaries: tuple[float, ...] = ()  # for bucketize
+    salt: int = 0                     # for hash
+    cross_of: tuple[str, str] | None = None  # for cross
+    max_len: int | None = None        # sequence truncation
+    shared_table: str | None = None   # share embedding rows with another column
+
+    def table_key(self) -> str:
+        return self.shared_table or self.name
+
+    def __post_init__(self):
+        assert self.pooling in POOLINGS, self.pooling
+        if self.transform == "mod":
+            assert self.vocab_size, f"{self.name}: mod needs vocab_size"
+        if self.transform == "bucketize":
+            assert len(self.boundaries) > 0, f"{self.name}: bucketize needs boundaries"
+        if self.transform == "cross":
+            assert self.cross_of is not None
+
+
+# ---------------------------------------------------------------------------
+# Fused ops (one per transform type — the paper's horizontal fusion)
+# ---------------------------------------------------------------------------
+
+def fused_hash(values: jax.Array, column_ids: jax.Array, salts: jax.Array) -> jax.Array:
+    """All hash columns in one op: ids ^= per-column salt, then mix."""
+    return splitmix64(values.astype(U64) ^ salts[column_ids].astype(U64)).astype(jnp.int64)
+
+
+def fused_mod(values: jax.Array, column_ids: jax.Array, vocab_sizes: jax.Array) -> jax.Array:
+    v = values.astype(jnp.int64)
+    m = vocab_sizes[column_ids].astype(jnp.int64)
+    return jnp.where(m > 0, jnp.abs(v) % jnp.maximum(m, 1), v)
+
+
+def fused_bucketize(
+    values: jax.Array,
+    column_ids: jax.Array,
+    boundaries: jax.Array,
+    boundary_offsets: jax.Array,
+) -> jax.Array:
+    """All bucketize columns in one op.
+
+    ``boundaries`` is the concatenation of every column's sorted boundary
+    list; ``boundary_offsets[c]:boundary_offsets[c+1]`` is column c's slice.
+    Shared-table binary search (log2 of max column size steps), masked per
+    column — this is the same trick the Pallas kernel uses on-chip.
+    """
+    starts = boundary_offsets[column_ids]
+    ends = boundary_offsets[column_ids + 1]
+    # each value's search range is ONE column's slice, so the trip count is
+    # log2(max column width), not log2(total table size)
+    widths = np.diff(np.asarray(boundary_offsets))
+    max_w = int(widths.max()) if widths.size else 1
+    n_steps = int(np.ceil(np.log2(max(max_w, 2))) + 1)
+    lo = starts
+    hi = ends
+    v = values.astype(jnp.float32)
+    for _ in range(n_steps):  # branch-free binary search, fixed trip count
+        mid = (lo + hi) // 2
+        mid_c = jnp.clip(mid, 0, boundaries.shape[0] - 1)
+        go_right = (mid < hi) & (v >= boundaries[mid_c])
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, jnp.where(mid < hi, mid, hi))
+    return (lo - starts).astype(jnp.int64)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class FeatureEngine:
+    """Groups FeatureSpecs by transform type and applies fused ops.
+
+    ``apply`` maps {name: Ragged} → {name: Ragged} (ids ready for embedding
+    lookup) plus {name: dense float array} for raw numerics. The grouping is
+    computed once at construction; apply is fully jit-compatible.
+    """
+
+    def __init__(self, specs: Sequence[FeatureSpec], use_pallas: bool = False):
+        self.specs = list(specs)
+        self.by_name = {s.name: s for s in self.specs}
+        assert len(self.by_name) == len(self.specs), "duplicate feature names"
+        self.use_pallas = use_pallas
+        self.groups: dict[str, list[FeatureSpec]] = {}
+        for s in self.specs:
+            self.groups.setdefault(s.transform, []).append(s)
+        # Per-group parameter tables (host-built once, tiny).
+        # Salts key on table_key() (not the column name) so columns sharing a
+        # table (FeatureSpec.shared_table) map raw ids identically, and on a
+        # DETERMINISTIC string hash (FNV-1a) — Python's hash() is randomized
+        # per process, which would silently re-key every id across restarts.
+        hash_specs = self.groups.get("hash", [])
+        self._hash_salts = jnp.asarray(
+            [splitmix64(jnp.uint64(_fnv1a(s.table_key())) + jnp.uint64(s.salt))
+             for s in hash_specs] or [0],
+            dtype=jnp.uint64,
+        )
+        mod_specs = self.groups.get("mod", [])
+        self._vocab_sizes = jnp.asarray([s.vocab_size for s in mod_specs] or [1], dtype=jnp.int64)
+        bz_specs = self.groups.get("bucketize", [])
+        bnds, offs = [], [0]
+        for s in bz_specs:
+            bnds.extend(s.boundaries)
+            offs.append(len(bnds))
+        self._boundaries = jnp.asarray(bnds or [0.0], dtype=jnp.float32)
+        self._boundary_offsets = jnp.asarray(offs, dtype=jnp.int32)
+
+    # number of fused device ops the transform pass issues (paper's metric:
+    # >600 column transforms -> ~3 ops)
+    @property
+    def n_fused_ops(self) -> int:
+        return sum(1 for k in ("hash", "mod", "bucketize") if self.groups.get(k))
+
+    def apply(self, batch: Mapping[str, Ragged]) -> tuple[dict[str, Ragged], dict[str, jax.Array]]:
+        id_out: dict[str, Ragged] = {}
+        dense_out: dict[str, jax.Array] = {}
+
+        for kind, fused in (("hash", self._apply_hash), ("mod", self._apply_mod), ("bucketize", self._apply_bucketize)):
+            specs = self.groups.get(kind, [])
+            if not specs:
+                continue
+            cols = [self._maybe_truncate(batch[s.name], s) for s in specs]
+            outs = fused(cols)
+            for s, r in zip(specs, outs):
+                id_out[s.name] = r
+
+        for s in self.groups.get("raw", []):
+            r = self._maybe_truncate(batch[s.name], s)
+            dense, _ = r.to_padded(s.max_len or 1, pad_value=0.0)
+            dense_out[s.name] = dense.astype(jnp.float32)
+
+        for s in self.groups.get("cross", []):
+            a, b = s.cross_of
+            ra = id_out.get(a) or batch[a]
+            rb = id_out.get(b) or batch[b]
+            id_out[s.name] = self._cross(ra, rb, s)
+
+        return id_out, dense_out
+
+    # -- group bodies --------------------------------------------------------
+
+    def _maybe_truncate(self, r: Ragged, s: FeatureSpec) -> Ragged:
+        if s.max_len is not None and s.transform != "raw" and s.pooling == "none":
+            return r.truncate(s.max_len)
+        return r
+
+    def _concat(self, cols: list[Ragged]):
+        vals = jnp.concatenate([c.values for c in cols])
+        cids = jnp.concatenate(
+            [jnp.full((c.nnz_budget,), i, dtype=jnp.int32) for i, c in enumerate(cols)]
+        )
+        return vals, cids
+
+    def _split(self, flat: jax.Array, cols: list[Ragged]) -> list[Ragged]:
+        outs, ofs = [], 0
+        for c in cols:
+            outs.append(Ragged(flat[ofs: ofs + c.nnz_budget], c.row_splits))
+            ofs += c.nnz_budget
+        return outs
+
+    def _apply_hash(self, cols):
+        vals, cids = self._concat(cols)
+        return self._split(fused_hash(vals, cids, self._hash_salts), cols)
+
+    def _apply_mod(self, cols):
+        vals, cids = self._concat(cols)
+        return self._split(fused_mod(vals, cids, self._vocab_sizes), cols)
+
+    def _apply_bucketize(self, cols):
+        vals, cids = self._concat(cols)
+        if self.use_pallas:
+            from repro.kernels.fused_transform import ops as ft_ops
+
+            out = ft_ops.fused_bucketize(
+                vals.astype(jnp.float32), cids, self._boundaries, self._boundary_offsets
+            )
+        else:
+            out = fused_bucketize(vals, cids, self._boundaries, self._boundary_offsets)
+        return self._split(out, cols)
+
+    def _cross(self, a: Ragged, b: Ragged, s: FeatureSpec) -> Ragged:
+        """Per-row cartesian hash-combine, densified at (ka, kb) caps."""
+        ka = min(s.max_len or 8, 8)
+        kb = ka
+        da, ma = a.to_padded(ka, pad_value=0)
+        db, mb = b.to_padded(kb, pad_value=0)
+        crossed = hash_combine(
+            da[:, :, None].astype(U64), db[:, None, :].astype(U64)
+        ).astype(jnp.int64)
+        mask = (ma[:, :, None] & mb[:, None, :]).reshape(a.n_rows, -1)
+        flat = jnp.where(mask, crossed.reshape(a.n_rows, -1), -1)
+        # compact each row's valid entries to the left so CSR is tight
+        order = jnp.argsort(~mask, axis=1, stable=True)
+        flat = jnp.take_along_axis(flat, order, axis=1)
+        lens = mask.sum(axis=1).astype(jnp.int32)
+        splits = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(lens)])
+        # values buffer stays (n_rows*ka*kb); live prefix is splits[-1] after
+        # a global compaction
+        gorder = jnp.argsort(~mask.reshape(-1), stable=True)
+        vals = flat.reshape(-1)[gorder]
+        return Ragged(vals, splits)

@@ -1,0 +1,208 @@
+"""IDMap — tier-1 of the RecIS Embedding Engine (§2.2.2 "Moving to GPU").
+
+A conflict-free, dynamically-growing feature-ID → row-offset map, stored as
+plain JAX arrays in device HBM so every probe runs at HBM bandwidth (the
+paper's point: the accelerator's bandwidth is 2 orders of magnitude above
+the host's). Open addressing with linear probing; *full 64-bit keys* are
+stored, so two distinct feature IDs can never share an embedding row —
+unlike static `id % vocab` tables. Collisions only exhaust after
+``max_probes`` slots, which at load factor ≤ 0.5 is vanishingly rare; such
+ids fall back to the reserved overflow row 0 and are **counted**, never
+dropped silently.
+
+All operations are jit-compatible, vectorized, and run fully on-device:
+  lookup            pure probe (serving path)
+  lookup_or_insert  probe + parallel claim of empty slots (training path)
+  evict             free rows whose last access is older than a threshold
+                    (continuous / online-window training, §2.1)
+
+Insertion uses a scatter-min "claim" per probe round: every inserting id
+writes its batch rank into the slot; the minimum rank wins the slot, losers
+continue probing. This is the TPU-native replacement for the CUDA CAS loop
+a GPU hash table would use (no atomics on TPU — DESIGN.md §2).
+
+Input ids of a single call MUST be unique (except PAD -1 padding); the
+Embedding Engine's ids-partition (dedupe) stage guarantees this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.feature_engine import splitmix64
+
+PAD = jnp.int64(-1)
+OVERFLOW_ROW = 0  # blocks row 0 is the reserved collision/overflow bucket
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class IDMap:
+    keys: jax.Array        # (capacity,) int64
+    occupied: jax.Array    # (capacity,) bool
+    offsets: jax.Array     # (capacity,) int32 — row in Blocks
+    last_use: jax.Array    # (capacity,) int32 — step of last access
+    free_stack: jax.Array  # (capacity,) int32 — recycled row offsets
+    free_size: jax.Array   # () int32
+    next_row: jax.Array    # () int32 — bump allocator (row 0 reserved)
+    n_rows: int            # static: Blocks row capacity
+    max_probes: int        # static
+
+    def tree_flatten(self):
+        children = (
+            self.keys, self.occupied, self.offsets, self.last_use,
+            self.free_stack, self.free_size, self.next_row,
+        )
+        return children, (self.n_rows, self.max_probes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    def n_live(self) -> jax.Array:
+        return self.occupied.sum(dtype=jnp.int32)
+
+
+def create(capacity: int, n_rows: int, max_probes: int = 32) -> IDMap:
+    return IDMap(
+        keys=jnp.zeros((capacity,), jnp.int64),
+        occupied=jnp.zeros((capacity,), jnp.bool_),
+        offsets=jnp.zeros((capacity,), jnp.int32),
+        last_use=jnp.zeros((capacity,), jnp.int32),
+        free_stack=jnp.zeros((capacity,), jnp.int32),
+        free_size=jnp.zeros((), jnp.int32),
+        next_row=jnp.ones((), jnp.int32),  # row 0 reserved for overflow
+        n_rows=n_rows,
+        max_probes=max_probes,
+    )
+
+
+def _home(ids: jax.Array, capacity: int) -> jax.Array:
+    return (splitmix64(ids) % jnp.uint64(capacity)).astype(jnp.int32)
+
+
+def lookup(m: IDMap, ids: jax.Array) -> jax.Array:
+    """Probe-only. Returns row offsets; missing/pad ids → OVERFLOW_ROW."""
+    cap = m.capacity
+    home = _home(ids, cap)
+    active = ids != PAD
+    found = jnp.full(ids.shape, -1, jnp.int32)
+
+    def body(r, found):
+        slot = (home + r) % cap
+        need = active & (found < 0)
+        hit = need & m.occupied[slot] & (m.keys[slot] == ids)
+        return jnp.where(hit, slot, found)
+
+    found = jax.lax.fori_loop(0, m.max_probes, body, found)
+    return jnp.where(found >= 0, m.offsets[jnp.maximum(found, 0)], OVERFLOW_ROW)
+
+
+@partial(jax.jit, static_argnames=())
+def lookup_or_insert(
+    m: IDMap, ids: jax.Array, step: jax.Array
+) -> tuple[IDMap, jax.Array, jax.Array, dict]:
+    """Training-path probe. Returns (new_map, offsets, is_new, metrics).
+
+    ids: (n,) int64, unique up to PAD(-1) padding.
+    offsets: (n,) int32 row in Blocks (OVERFLOW_ROW on probe exhaustion /
+    row-capacity exhaustion / pad).
+    """
+    cap = m.capacity
+    n = ids.shape[0]
+    home = _home(ids, cap)
+    active = ids != PAD
+    rank = jnp.arange(n, dtype=jnp.int32)
+    found = jnp.full((n,), -1, jnp.int32)
+    is_new = jnp.zeros((n,), jnp.bool_)
+
+    def body(r, carry):
+        keys, occ, found, is_new = carry
+        slot = (home + r) % cap
+        need = active & (found < 0)
+        k = keys[slot]
+        hit = need & occ[slot] & (k == ids)
+        found = jnp.where(hit, slot, found)
+        # claim empty slots via scatter-min of batch rank (parallel-safe)
+        want = need & ~hit & ~occ[slot]
+        claims = jnp.full((cap,), n, jnp.int32).at[slot].min(
+            jnp.where(want, rank, n), mode="drop"
+        )
+        won = want & (claims[slot] == rank)
+        wslot = jnp.where(won, slot, cap)  # cap = out-of-range → dropped
+        keys = keys.at[wslot].set(ids, mode="drop")
+        occ = occ.at[wslot].set(True, mode="drop")
+        found = jnp.where(won, slot, found)
+        is_new = is_new | won
+        return keys, occ, found, is_new
+
+    keys, occ, found, is_new = jax.lax.fori_loop(
+        0, m.max_probes, body, (m.keys, m.occupied, found, is_new)
+    )
+
+    # ---- allocate rows for the winners: recycled offsets first, then bump
+    new_rank = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    n_inserted = is_new.sum(dtype=jnp.int32)
+    from_stack = new_rank < m.free_size
+    stack_idx = jnp.clip(m.free_size - 1 - new_rank, 0, cap - 1)
+    bumped = m.next_row + (new_rank - m.free_size)
+    row = jnp.where(from_stack, m.free_stack[stack_idx], bumped)
+    row_ok = row < m.n_rows
+    row = jnp.where(is_new & row_ok, row, OVERFLOW_ROW).astype(jnp.int32)
+
+    taken_from_stack = jnp.minimum(n_inserted, m.free_size)
+    free_size = m.free_size - taken_from_stack
+    next_row = jnp.minimum(
+        m.next_row + jnp.maximum(n_inserted - taken_from_stack, 0), m.n_rows
+    )
+
+    offsets = m.offsets.at[jnp.where(is_new, found, cap)].set(row, mode="drop")
+    touched_slot = jnp.where(found >= 0, found, cap)
+    last_use = m.last_use.at[touched_slot].set(step.astype(jnp.int32), mode="drop")
+
+    out_off = jnp.where(found >= 0, offsets[jnp.maximum(found, 0)], OVERFLOW_ROW)
+    metrics = {
+        "idmap_inserted": n_inserted,
+        "idmap_probe_overflow": (active & (found < 0)).sum(dtype=jnp.int32),
+        "idmap_row_overflow": (is_new & ~row_ok).sum(dtype=jnp.int32),
+    }
+    new_m = IDMap(
+        keys=keys, occupied=occ, offsets=offsets, last_use=last_use,
+        free_stack=m.free_stack, free_size=free_size, next_row=next_row,
+        n_rows=m.n_rows, max_probes=m.max_probes,
+    )
+    return new_m, out_off, is_new & row_ok, metrics
+
+
+def evict(m: IDMap, older_than: jax.Array) -> tuple[IDMap, jax.Array]:
+    """Free every row whose last access predates ``older_than``.
+
+    The slot is cleared and the row offset is pushed onto the free stack for
+    reuse — the paper's stale-feature eviction for continuous training.
+    Returns (new_map, n_evicted).
+    """
+    cap = m.capacity
+    stale = m.occupied & (m.last_use < older_than.astype(jnp.int32))
+    pos = jnp.cumsum(stale.astype(jnp.int32)) - 1
+    n_evicted = stale.sum(dtype=jnp.int32)
+    dst = jnp.where(stale, m.free_size + pos, cap)
+    free_stack = m.free_stack.at[dst].set(m.offsets, mode="drop")
+    new_m = IDMap(
+        keys=m.keys,
+        occupied=m.occupied & ~stale,
+        offsets=m.offsets,
+        last_use=m.last_use,
+        free_stack=free_stack,
+        free_size=jnp.minimum(m.free_size + n_evicted, cap),
+        next_row=m.next_row,
+        n_rows=m.n_rows,
+        max_probes=m.max_probes,
+    )
+    return new_m, n_evicted

@@ -1,0 +1,158 @@
+"""RaggedBatch — the CSR memory layout RecIS uses for sparse features.
+
+The paper (§2.2.1 "Memory Layout - CSR") replaces COO SparseTensors with
+CSR RaggedTensors: ``values[nnz]`` + ``row_splits[batch+1]``. On TPU we
+additionally need *static* shapes under jit, so every ragged column carries
+an ``nnz_budget``: values are stored in a fixed-size buffer, the live prefix
+length is ``row_splits[-1]``, and the padding tail is marked with
+``PAD_ID`` / zeros. Overflow at batching time is truncated and counted
+(surfaced as a pipeline metric, never a crash — §DESIGN.md assumption (b)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD_ID = jnp.int64(-1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Ragged:
+    """A single ragged column in CSR form with a static value budget.
+
+    values:     (nnz_budget,) int64 ids or float32 numerics; tail padded.
+    row_splits: (n_rows + 1,) int32 CSR offsets; row_splits[-1] == live nnz.
+    """
+
+    values: jax.Array
+    row_splits: jax.Array
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.values, self.row_splits), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- shape helpers ------------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return self.row_splits.shape[0] - 1
+
+    @property
+    def nnz_budget(self) -> int:
+        return self.values.shape[0]
+
+    def live_nnz(self) -> jax.Array:
+        return self.row_splits[-1]
+
+    def row_lengths(self) -> jax.Array:
+        return self.row_splits[1:] - self.row_splits[:-1]
+
+    def segment_ids(self) -> jax.Array:
+        """Per-value row index; padding tail gets ``n_rows`` (an out-of-range
+        segment), so segment reductions with ``num_segments=n_rows`` drop it.
+        """
+        n = self.nnz_budget
+        # searchsorted over row_splits gives the row of each flat position.
+        pos = jnp.arange(n, dtype=self.row_splits.dtype)
+        seg = jnp.searchsorted(self.row_splits, pos, side="right") - 1
+        live = pos < self.row_splits[-1]
+        return jnp.where(live, seg, self.n_rows)
+
+    def valid_mask(self) -> jax.Array:
+        pos = jnp.arange(self.nnz_budget, dtype=self.row_splits.dtype)
+        return pos < self.row_splits[-1]
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_lists(
+        cls,
+        rows: Sequence[Sequence],
+        nnz_budget: int | None = None,
+        dtype=jnp.int64,
+    ) -> "Ragged":
+        """Host-side constructor (numpy); truncates rows that overflow the
+        budget *from the batch tail* (matches paper's sequence truncation)."""
+        lens = np.array([len(r) for r in rows], dtype=np.int32)
+        flat = np.concatenate([np.asarray(r) for r in rows]) if len(rows) and lens.sum() else np.zeros((0,))
+        total = int(lens.sum())
+        budget = nnz_budget if nnz_budget is not None else max(total, 1)
+        if total > budget:  # truncate whole tail rows first, then clip
+            keep = np.cumsum(lens) <= budget
+            lens = np.where(keep, lens, 0)
+            # allow a partial final row
+            spill = budget - int(lens.sum())
+            if spill > 0:
+                first_drop = int(np.argmin(keep)) if not keep.all() else len(lens)
+                if first_drop < len(lens):
+                    lens[first_drop] = spill
+            flat = flat[:budget]
+        splits = np.zeros(len(rows) + 1, dtype=np.int32)
+        np.cumsum(lens, out=splits[1:])
+        vals = np.full((budget,), -1 if np.issubdtype(np.asarray(flat).dtype, np.integer) else 0.0)
+        vals = vals.astype(np.dtype(jnp.dtype(dtype).name) if dtype != jnp.int64 else np.int64)
+        vals[: splits[-1]] = flat[: splits[-1]]
+        return cls(jnp.asarray(vals, dtype=dtype), jnp.asarray(splits))
+
+    @classmethod
+    def dense(cls, x: jax.Array) -> "Ragged":
+        """Wrap a dense (rows, k) array as a fixed-length ragged column."""
+        rows, k = x.shape
+        splits = jnp.arange(rows + 1, dtype=jnp.int32) * k
+        return cls(x.reshape(-1), splits)
+
+    # -- ops ------------------------------------------------------------------
+    def truncate(self, max_len: int) -> "Ragged":
+        """Per-row head-truncation to ``max_len`` (paper: sequence processing).
+
+        Keeps the first ``max_len`` values of each row; CSR is recompacted
+        into the same budget buffer.
+        """
+        lens = jnp.minimum(self.row_lengths(), max_len)
+        new_splits = jnp.concatenate(
+            [jnp.zeros((1,), lens.dtype), jnp.cumsum(lens)]
+        ).astype(self.row_splits.dtype)
+        # position j of new layout maps to old index: old_start[row] + offset
+        pos = jnp.arange(self.nnz_budget, dtype=jnp.int32)
+        row = jnp.searchsorted(new_splits, pos, side="right") - 1
+        row = jnp.clip(row, 0, self.n_rows - 1)
+        off = pos - new_splits[row]
+        src = self.row_splits[row] + off
+        live = pos < new_splits[-1]
+        pad = PAD_ID if jnp.issubdtype(self.values.dtype, jnp.integer) else 0
+        vals = jnp.where(live, self.values[jnp.clip(src, 0, self.nnz_budget - 1)], pad)
+        return Ragged(vals.astype(self.values.dtype), new_splits)
+
+    def to_padded(self, max_len: int, pad_value=0) -> tuple[jax.Array, jax.Array]:
+        """Densify to (n_rows, max_len) + mask. Used by sequence models."""
+        rows = self.n_rows
+        idx = self.row_splits[:-1, None] + jnp.arange(max_len)[None, :]
+        mask = jnp.arange(max_len)[None, :] < self.row_lengths()[:, None]
+        idx = jnp.clip(idx, 0, self.nnz_budget - 1)
+        out = jnp.where(mask, self.values[idx], pad_value)
+        return out.reshape(rows, max_len).astype(self.values.dtype), mask
+
+
+def concat_ragged(columns: Iterable[Ragged]) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Concatenate several ragged columns' value buffers for a fused op.
+
+    Returns (flat_values, column_ids, valid_mask). This is the "merge
+    requests of the same dimension" step (paper §2.2.2 Load Balancing) and
+    the horizontal-fusion substrate (§2.2.2 GPU Concurrency Optimization):
+    one kernel sees all columns with a per-value column id.
+    """
+    cols = list(columns)
+    vals = jnp.concatenate([c.values for c in cols])
+    cids = jnp.concatenate(
+        [jnp.full((c.nnz_budget,), i, dtype=jnp.int32) for i, c in enumerate(cols)]
+    )
+    mask = jnp.concatenate([c.valid_mask() for c in cols])
+    return vals, cids, mask

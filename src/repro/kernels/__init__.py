@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the sparse hot-spots RecIS optimizes (paper §2.2.2
+"Maximizing Bandwidth Utilization" + §2.2.3 Fused Kernels).
+
+Every kernel package has three files:
+  <name>.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py     jit'd public wrapper (padding, tiling choice, interpret fallback)
+  ref.py     pure-jnp oracle used by the tests' allclose sweeps
+
+Mapping to the paper's Table 1 operators:
+  segment_reduce   reduce sum/mean (hard+easy)  — MXU one-hot matmul, no atomics
+  fused_gather     gather                        — scalar-prefetch row DMA
+  fused_scatter    scatter                       — row scatter-update
+  fused_transform  bucketize (fused, multi-col)  — shared binary search in VMEM
+  sequence_tile    sequence tile (concat pool)   — prefetch-driven row copy
+  flash_attention  dense-side fused attention    — §2.2.3 (compute wall)
+
+CPU validation: every op wrapper takes ``interpret=None`` which defaults to
+True off-TPU, running the kernel body in the Pallas interpreter.
+"""
+
+
+def default_interpret() -> bool:
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,93 @@
+"""Public flash-attention op: layout, padding, custom VJP, interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention import flash_attention as k
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _tiles(t: int, hd: int) -> tuple[int, int]:
+    """(tq, tk): 128–512 tiles; VMEM ≈ (tq+2·tk)·hd·4 + tq·tk·4 ≲ 6 MiB."""
+    tq = min(512, t)
+    tk = min(512, t)
+    while (tq + 2 * tk) * hd * 4 + tq * tk * 4 > (6 << 20) and tq > 128:
+        tq //= 2
+        tk //= 2
+    return tq, tk
+
+
+def _to_bh(x: jax.Array) -> jax.Array:
+    """(B, T, H, hd) → (B·H, T, hd)."""
+    b, t, h, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+
+
+def _from_bh(x: jax.Array, b: int, h: int) -> jax.Array:
+    bh, t, hd = x.shape
+    return x.reshape(b, h, t, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(
+    q: jax.Array,  # (B, T, H, hd) — kv heads pre-expanded to H
+    k_: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused causal attention (paper §2.2.3). Returns (B, T, H, hd)."""
+    o, _ = _fwd_impl(q, k_, v, causal, interpret)
+    return o
+
+
+def _fwd_impl(q, k_, v, causal, interpret):
+    interpret = default_interpret() if interpret is None else interpret
+    b, t, h, hd = q.shape
+    tq, tk = _tiles(t, max(hd, 128))
+    hd_p = _round_up(hd, 128)
+    t_p = _round_up(t, max(tq, tk))
+
+    def prep(x):
+        x = _to_bh(x)
+        return jnp.pad(x, ((0, 0), (0, t_p - t), (0, hd_p - hd)))
+
+    qp, kp, vp = prep(q), prep(k_), prep(v)
+    # Sequence padding: under the causal mask every real q row (< t) only
+    # sees k cols ≤ row < t, so zero-padded K/V columns are unreachable and
+    # padded q rows are sliced away below. Non-causal therefore requires an
+    # exactly-tiled sequence.
+    if t_p != t:
+        assert causal, "non-causal flash_attention requires t % tile == 0"
+    o, lse = k.flash_fwd(qp, kp, vp, tq=tq, tk=tk, causal=causal,
+                         interpret=interpret, scale=float(1.0 / hd ** 0.5))
+    o = _from_bh(o[:, :t, :hd], b, h)
+    return o, (qp, kp, vp, o, lse, (b, t, h, hd, tq, tk))
+
+
+def _vjp_fwd(q, k_, v, causal, interpret):
+    o, res = _fwd_impl(q, k_, v, causal, interpret)
+    return o, res
+
+
+def _vjp_bwd(causal, interpret, res, g):
+    qp, kp, vp, o, lse, (b, t, h, hd, tq, tk) = res
+    interpret = default_interpret() if interpret is None else interpret
+    t_p, hd_p = qp.shape[1], qp.shape[2]
+    op = jnp.pad(_to_bh(o), ((0, 0), (0, t_p - t), (0, hd_p - hd)))
+    gp = jnp.pad(_to_bh(g), ((0, 0), (0, t_p - t), (0, hd_p - hd)))
+    dq, dk, dv = k.flash_bwd(qp, kp, vp, op, lse, gp, tq=tq, tk=tk,
+                             causal=causal, interpret=interpret,
+                             scale=float(1.0 / hd ** 0.5))
+    un = lambda x: _from_bh(x[:, :t, :hd], b, h)
+    return un(dq), un(dk), un(dv)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash_attention (paper §2.2.3 Fused Kernels)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """q, k, v: (B, T, H, hd), same head count (kv pre-expanded). fp32 math."""
+    b, t, h, hd = q.shape
+    scale = np.float32(1.0 / np.sqrt(hd))
+    s = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhts,bshd->bthd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.fused_gather.ops import gather_rows  # noqa: F401

@@ -1,0 +1,54 @@
+"""Public gather op: clamping, padding, mode choice, interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.fused_gather import fused_gather as k
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def gather_rows(
+    table: jax.Array,          # (R, D)
+    ids: jax.Array,            # (K,) int — PAD/-1 or out-of-range → row 0
+    interpret: bool | None = None,
+    mode: str = "row",         # row (per-row DMA) | slab (sorted slab DMA)
+    rows_blk: int = 128,
+    slab: int = 512,
+) -> jax.Array:
+    """Paper Table 1 "gather": fetch K rows of a (R, D) table.
+
+    ``row``  — one prefetch-driven row DMA per id (any id order). Default,
+               always correct.
+    ``slab`` — PRECONDITION: every consecutive run of ``rows_blk`` ids must
+               fall inside one slab-ALIGNED (slab, D) window (sorted, locally
+               dense ids — the benchmark regime the paper's "adjacent rows"
+               observation describes). Fetches the window once and extracts
+               rows with a one-hot MXU matmul: slab/rows_blk× higher
+               bytes-in-flight per grid step. Ids violating the precondition
+               read as zeros; use mode="row" when unsure.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    kk = ids.shape[0]
+    r = table.shape[0]
+    idx = jnp.where((ids >= 0) & (ids < r), ids, 0).astype(jnp.int32)
+    tab = table.astype(jnp.float32)
+    if mode == "slab":
+        slab = min(slab, _round_up(r, 8))
+        kp = _round_up(max(kk, rows_blk), rows_blk)
+        if kp != kk:
+            idx = jnp.pad(idx, (0, kp - kk))
+        # slab windows must fit: pad the table to a multiple of slab
+        rp = _round_up(r, slab)
+        if rp != r:
+            tab = jnp.pad(tab, ((0, rp - r), (0, 0)))
+        out = k.gather_rows_slab(
+            tab, idx, rows_blk=rows_blk, slab=slab, interpret=interpret,
+        )
+        return out[:kk].astype(table.dtype)
+    out = k.gather_rows_padded(tab, idx, rows_blk=1, interpret=interpret)
+    return out.astype(table.dtype)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for fused_gather (paper Table 1: gather)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """(R, D) × (K,) int32 → (K, D). ids are clamped into range (the engine
+    clamps PAD → overflow row 0 before calling)."""
+    idx = jnp.clip(ids, 0, table.shape[0] - 1)
+    return table[idx]

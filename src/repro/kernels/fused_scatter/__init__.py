@@ -1,0 +1,1 @@
+from repro.kernels.fused_scatter.ops import scatter_add_rows, scatter_set_rows  # noqa: F401

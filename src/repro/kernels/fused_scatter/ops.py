@@ -1,0 +1,53 @@
+"""Public scatter ops: clamping, validity routing, interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.fused_scatter import fused_scatter as k
+
+
+def _prep(table, ids, rows, valid):
+    r = table.shape[0]
+    ok = (ids >= 0) & (ids < r)
+    if valid is not None:
+        ok = ok & valid
+    idx = jnp.where(ok, ids, 0).astype(jnp.int32)  # invalid → overflow row 0
+    return idx, ok.astype(jnp.int32)
+
+
+def scatter_add_rows(
+    table: jax.Array,              # (R, D)
+    ids: jax.Array,                # (K,) UNIQUE row ids
+    rows: jax.Array,               # (K, D)
+    valid: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """table[ids] += rows (unique ids; invalid → zero-delta on row 0).
+
+    CONSUMES ``table`` (donated for the in-place aliased update — the whole
+    point of the kernel); callers must use the returned array.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    idx, ok = _prep(table, ids, rows, valid)
+    return k.scatter_rows_padded(
+        table.astype(jnp.float32), idx, ok, rows.astype(jnp.float32),
+        op="add", interpret=interpret,
+    ).astype(table.dtype)
+
+
+def scatter_set_rows(
+    table: jax.Array,
+    ids: jax.Array,
+    rows: jax.Array,
+    valid: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """table[ids] = rows (unique ids; invalid slots leave the table intact)."""
+    interpret = default_interpret() if interpret is None else interpret
+    idx, ok = _prep(table, ids, rows, valid)
+    return k.scatter_rows_padded(
+        table.astype(jnp.float32), idx, ok, rows.astype(jnp.float32),
+        op="set", interpret=interpret,
+    ).astype(table.dtype)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for fused_scatter (paper Table 1: scatter)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_set_rows(
+    table: jax.Array, ids: jax.Array, rows: jax.Array, valid: jax.Array | None = None
+) -> jax.Array:
+    """Overwrite table[ids] = rows where valid; invalid slots dropped."""
+    if valid is None:
+        valid = jnp.ones(ids.shape, bool)
+    dst = jnp.where(valid & (ids >= 0) & (ids < table.shape[0]), ids, table.shape[0])
+    return table.at[dst].set(rows.astype(table.dtype), mode="drop")
+
+
+def scatter_add_rows(
+    table: jax.Array, ids: jax.Array, rows: jax.Array, valid: jax.Array | None = None
+) -> jax.Array:
+    if valid is None:
+        valid = jnp.ones(ids.shape, bool)
+    dst = jnp.where(valid & (ids >= 0) & (ids < table.shape[0]), ids, table.shape[0])
+    return table.at[dst].add(rows.astype(table.dtype), mode="drop")

@@ -1,0 +1,1 @@
+from repro.kernels.fused_transform.ops import fused_bucketize  # noqa: F401

@@ -1,0 +1,45 @@
+"""Public fused bucketize op: lane packing, padding, interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.fused_transform import fused_transform as k
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def fused_bucketize(
+    values: jax.Array,            # (N,) f32 — ALL bucketize columns, concatenated
+    column_ids: jax.Array,        # (N,) int32
+    boundaries: jax.Array,        # (B,) f32 — concatenated sorted boundary lists
+    boundary_offsets: jax.Array,  # (C+1,) int32
+    interpret: bool | None = None,
+    tr: int = 8,
+) -> jax.Array:
+    """One kernel for every bucketize column (paper Table 1 "bucketize").
+
+    Returns (N,) int64 bucket indices, identical semantics to
+    ``feature_engine.fused_bucketize`` (right-open bins).
+    """
+    import numpy as np
+
+    interpret = default_interpret() if interpret is None else interpret
+    n = values.shape[0]
+    lanes = 128
+    npad = _round_up(max(n, tr * lanes), tr * lanes)
+    v = jnp.pad(values.astype(jnp.float32), (0, npad - n), constant_values=-jnp.inf)
+    c = jnp.pad(column_ids.astype(jnp.int32), (0, npad - n))
+    # trip count from max column width (offsets are static table params)
+    widths = np.diff(np.asarray(boundary_offsets))
+    max_w = int(widths.max()) if widths.size else 1
+    n_steps = int(np.ceil(np.log2(max(max_w, 2))) + 1)
+    out = k.fused_bucketize_padded(
+        v.reshape(-1, lanes), c.reshape(-1, lanes),
+        boundaries.astype(jnp.float32), boundary_offsets.astype(jnp.int32),
+        tr=tr, interpret=interpret, n_steps=n_steps,
+    )
+    return out.reshape(-1)[:n].astype(jnp.int64)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for fused_transform (paper Table 1: bucketize, fused)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fused_bucketize(
+    values: jax.Array,            # (N,) f32
+    column_ids: jax.Array,        # (N,) int32
+    boundaries: jax.Array,        # (B,) f32, concatenated sorted per-column lists
+    boundary_offsets: jax.Array,  # (C+1,) int32
+) -> jax.Array:
+    """Per-value bucket index within its column's boundary list.
+
+    bucket = #boundaries in the column that are <= value (right-open bins),
+    i.e. ``np.searchsorted(col_boundaries, v, side='right')``.
+    """
+    def one(v, c):
+        lo = boundary_offsets[c]
+        hi = boundary_offsets[c + 1]
+        # mask out other columns' boundaries, then count <= v
+        pos = jnp.arange(boundaries.shape[0])
+        in_col = (pos >= lo) & (pos < hi)
+        return jnp.sum(in_col & (boundaries <= v)).astype(jnp.int32)
+
+    return jax.vmap(one)(values.astype(jnp.float32), column_ids).astype(jnp.int64)

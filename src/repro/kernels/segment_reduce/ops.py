@@ -1,0 +1,97 @@
+"""Public segment-reduce ops: padding, tile choice, VJP, interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.segment_reduce import segment_reduce as k
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _tiles(n: int, s: int, d: int) -> tuple[int, int]:
+    """(ts, tn): MXU-aligned (multiples of 128 when the problem allows) with
+    the VMEM working set  tn·d + ts·d + tn·ts  (fp32) kept ≲ 4 MiB."""
+    ts = min(128, _round_up(s, 8))
+    tn = min(512, _round_up(n, 8))
+    while d * 4 * (tn + ts) + 4 * tn * ts > (4 << 20) and tn > 128:
+        tn //= 2
+    return ts, tn
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5)
+)
+def segment_sum(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    interpret: bool | None = None,
+    skip_empty: bool = True,
+    tiles: tuple[int, int] | None = None,
+) -> jax.Array:
+    """Pooled embedding reduce (paper Table 1 "reduce"): (N, D) → (S, D).
+
+    Out-of-range segment ids (< 0 or ≥ num_segments) contribute nothing —
+    the Ragged padding convention (seg == n_rows for dead values) just works.
+    Differentiable in ``values`` (the reduction is linear; the VJP is a row
+    gather, served by the fused_gather kernel's semantics).
+    """
+    return _fwd_impl(values, segment_ids, num_segments, interpret, skip_empty, tiles)
+
+
+def _fwd_impl(values, segment_ids, num_segments, interpret, skip_empty, tiles):
+    interpret = default_interpret() if interpret is None else interpret
+    n, d = values.shape
+    ts, tn = tiles or _tiles(n, num_segments, d)
+    n_pad = _round_up(max(n, tn), tn)
+    s_pad = _round_up(max(num_segments, ts), ts)
+    dtype = values.dtype
+    ok = (segment_ids >= 0) & (segment_ids < num_segments)
+    vals = values.astype(jnp.float32)
+    # out-of-range → the padded tail segment region (dropped at the slice);
+    # when num_segments == s_pad there is no spare tail segment, so those
+    # values are zeroed instead (still routed to s_pad-1, adding 0).
+    seg = jnp.where(ok, segment_ids, s_pad - 1).astype(jnp.int32)
+    if s_pad == num_segments:
+        vals = vals * ok.astype(vals.dtype)[:, None]
+    if n_pad != n:
+        vals = jnp.pad(vals, ((0, n_pad - n), (0, 0)))  # zero rows
+        seg = jnp.pad(seg, (0, n_pad - n), constant_values=s_pad - 1)
+    out = k.segment_sum_padded(
+        vals, seg, s_pad, ts=ts, tn=tn, interpret=interpret, skip_empty=skip_empty
+    )
+    return out[:num_segments].astype(dtype)
+
+
+def _fwd(values, segment_ids, num_segments, interpret, skip_empty, tiles):
+    out = _fwd_impl(values, segment_ids, num_segments, interpret, skip_empty, tiles)
+    return out, (segment_ids, values.shape[0])
+
+
+def _bwd(num_segments, interpret, skip_empty, tiles, res, g):
+    segment_ids, n = res
+    ok = (segment_ids >= 0) & (segment_ids < num_segments)
+    idx = jnp.clip(segment_ids, 0, num_segments - 1)
+    dv = g[idx] * ok[:, None].astype(g.dtype)
+    return dv, None
+
+
+segment_sum.defvjp(_fwd, _bwd)
+
+
+def segment_mean(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    s = segment_sum(values, segment_ids, num_segments, interpret)
+    ones = jnp.ones((values.shape[0], 1), values.dtype)
+    cnt = segment_sum(ones, segment_ids, num_segments, interpret)
+    return s / jnp.maximum(cnt, 1.0)

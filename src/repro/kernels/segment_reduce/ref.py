@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for segment_reduce (paper Table 1: reduce hard/easy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(values: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    """values (N, D) × segment_ids (N,) → (num_segments, D).
+
+    Out-of-range segment ids (e.g. the padding convention seg == num_segments)
+    are dropped — identical semantics to the kernel.
+    """
+    return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(values: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    s = segment_sum(values, segment_ids, num_segments)
+    cnt = jax.ops.segment_sum(
+        jnp.ones((values.shape[0],), values.dtype), segment_ids, num_segments=num_segments
+    )
+    return s / jnp.maximum(cnt, 1.0)[:, None]

@@ -1,0 +1,1 @@
+from repro.kernels.sequence_tile.ops import sequence_tile  # noqa: F401

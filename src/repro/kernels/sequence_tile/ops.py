@@ -1,0 +1,21 @@
+"""Public sequence-tile op."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.sequence_tile import sequence_tile as k_mod
+
+
+def sequence_tile(
+    values: jax.Array,      # (N, D)
+    row_splits: jax.Array,  # (n_rows + 1,)
+    k: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Concat pooling (paper Table 1 "sequence tile"): (n_rows, k·D)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return k_mod.sequence_tile_padded(
+        values.astype(jnp.float32), row_splits, k=k, interpret=interpret
+    ).astype(values.dtype)

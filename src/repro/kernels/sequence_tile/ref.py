@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for sequence_tile (paper Table 1: sequence tile)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sequence_tile(
+    values: jax.Array,      # (N, D) per-value embedding rows, CSR order
+    row_splits: jax.Array,  # (n_rows + 1,) int32
+    k: int,                 # tile width (first k values per row, zero-padded)
+) -> jax.Array:
+    """Concat pooling: (n_rows, k·D); row i = values[splits[i] : splits[i]+k]
+    left-justified, zero-padded past the row's length."""
+    n_rows = row_splits.shape[0] - 1
+    nnz = values.shape[0]
+    idx = row_splits[:-1, None] + jnp.arange(k)[None, :]
+    lens = row_splits[1:] - row_splits[:-1]
+    mask = jnp.arange(k)[None, :] < lens[:, None]
+    idx = jnp.clip(idx, 0, nnz - 1)
+    tiles = values[idx] * mask[..., None].astype(values.dtype)
+    return tiles.reshape(n_rows, k * values.shape[-1])

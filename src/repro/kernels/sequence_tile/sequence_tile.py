@@ -1,0 +1,60 @@
+"""Sequence-tile (concat) pooling as a prefetch-driven row copier.
+
+The paper's `sequence tile` op (Table 1) concatenates the first k value
+embeddings of each ragged row into one (k·D) output row — TF/PyTorch need a
+reduce + reshape + pad chain (2.4%/4.6% MBU); RecIS fuses it (18.25%).
+
+TPU mapping: the CSR ``row_splits`` vector rides in as a scalar-prefetch
+operand, so the (row, j) grid step's index map addresses value row
+``splits[row] + j`` directly — the DMA engine streams exactly the rows the
+output needs, in output order, and the compute core only predicates the
+copy against the row length (tail positions write zeros). HBM traffic =
+in-bytes + out-bytes exactly; nothing is re-read, which is the MBU
+roofline for a copy-shaped op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(splits_ref, vals_blk_ref, out_ref, *, k: int):
+    i = pl.program_id(0)   # output row
+    j = pl.program_id(1)   # tile slot within the row
+    ok = splits_ref[i] + j < splits_ref[i + 1]
+    out_ref[...] = jnp.where(ok, vals_blk_ref[...], jnp.zeros_like(out_ref))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def sequence_tile_padded(
+    values: jax.Array,      # (N, D) f32
+    row_splits: jax.Array,  # (n_rows + 1,) int32, splits[i]+j clamped by wrapper
+    *,
+    k: int,
+    interpret: bool,
+) -> jax.Array:
+    n_rows = row_splits.shape[0] - 1
+    nnz, d = values.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_rows, k),
+        in_specs=[
+            pl.BlockSpec(
+                (1, d),
+                lambda i, j, splits: (jnp.minimum(splits[i] + j, nnz - 1), 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j, splits: (i, j, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, k, d), values.dtype),
+        interpret=interpret,
+    )(row_splits.astype(jnp.int32), values)
+    return out.reshape(n_rows, k * d)

@@ -1,0 +1,38 @@
+"""Cell dispatcher: (arch-id, shape-name, mesh) → assembled Cell.
+
+``input_specs(arch_id, shape_name, mesh)`` returns the ShapeDtypeStruct
+stand-ins (weak-type-correct, sharded, no device allocation) for every
+model input of that cell — the dry-run contract.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch.common import Cell, CellOptions
+
+
+def input_specs(arch_id: str, shape_name: str, mesh,
+                opts: CellOptions = CellOptions()):
+    """ShapeDtypeStruct pytree for the cell's step-function inputs
+    (state, batch) — what ``jax.jit(step).lower(**...)`` consumes."""
+    cell = build_cell(arch_id, shape_name, mesh, opts)
+    return {"state": cell.abstract_state, "batch": cell.batch_specs}
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, opts: CellOptions = CellOptions(),
+               smoke: bool = False, shape_override: ShapeCell | None = None) -> Cell:
+    arch = get_config(arch_id, smoke=smoke)
+    shape = shape_override or arch.shape(shape_name)
+    if arch.family == "lm":
+        from repro.launch import lm_cell
+
+        return lm_cell.build(arch, shape, mesh, opts)
+    if arch.family == "recsys":
+        from repro.launch import recsys_cell
+
+        return recsys_cell.build(arch, shape, mesh, opts)
+    if arch.family == "gnn":
+        from repro.launch import gnn_cell
+
+        return gnn_cell.build(arch, shape, mesh, opts)
+    raise ValueError(arch.family)

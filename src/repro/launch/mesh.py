@@ -1,0 +1,35 @@
+"""Production mesh definitions (multi-pod dry-run spec).
+
+Functions, not module-level constants: importing this module never touches
+jax device state, so smoke tests keep their single real device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None):
+    """Small host mesh for multi-device tests (forced host devices)."""
+    n = n_devices or len(jax.devices())
+    assert n % 2 == 0, "debug mesh wants an even device count"
+    return jax.make_mesh((n // 2, 2), ("data", "model"))
+
+
+def mesh_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Batch axes = everything except the tensor/EP axis ("model")."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_devices(mesh) -> int:
+    return mesh.devices.size

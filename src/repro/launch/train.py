@@ -1,0 +1,101 @@
+"""End-to-end train driver: --arch/--shape → cell → Trainer loop.
+
+On real TPU pods this runs under the production mesh; on this CPU container
+it runs the reduced (smoke) config of the same arch on the available
+devices — the full configs are exercised via ``dryrun.py``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch dlrm-mlperf \
+      --steps 100 --batch 256 --ckpt-dir /tmp/ckpt [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeCell
+from repro.launch.cells import build_cell
+from repro.launch.common import CellOptions
+from repro.pipelines import TrainConfig, Trainer
+
+
+def small_mesh():
+    devs = np.array(jax.devices())
+    return jax.make_mesh((devs.size,), ("data",), devices=devs)
+
+
+def smoke_shape(arch, shape_name: str | None, batch: int, seq_len: int) -> ShapeCell:
+    fam = arch.family
+    if fam == "lm":
+        return ShapeCell(shape_name or "train_4k", "train",
+                         {"seq_len": seq_len, "global_batch": batch})
+    if fam == "recsys":
+        return ShapeCell(shape_name or "train_batch", "train", {"batch": batch})
+    return ShapeCell(shape_name or "molecule", "graph_batch",
+                     {"n_nodes": 12, "n_edges": 24, "batch": batch,
+                      "d_feat": 16, "n_classes": 2})
+
+
+def make_evict_fn(cell):
+    """Between-window stale-row eviction on the cell's sparse state (if any)."""
+    return None  # cells fold eviction into the engine; exposed via examples
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True, choices=ARCH_IDS)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=64)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--use-pallas", action="store_true")
+    p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    mesh = small_mesh()
+    arch = get_config(args.arch, smoke=True)
+    shape = smoke_shape(arch, args.shape, args.batch, args.seq_len)
+    opts = CellOptions(use_pallas=args.use_pallas, remat=False, zero1=False)
+    cell = build_cell(args.arch, shape.name, mesh, opts, smoke=True,
+                      shape_override=shape)
+
+    tcfg = TrainConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every, resume=args.resume,
+                       log_every=args.log_every)
+    trainer = Trainer(cell, tcfg)
+
+    with mesh:
+        state = cell.init_state()
+        state, start, cursor = trainer.try_resume(state)
+        if start:
+            print(f"resumed from step {start} (cursor={cursor})")
+
+        def batches():
+            s = args.seed + start
+            while True:
+                yield cell.make_batch(s)
+                s += 1
+
+        res = trainer.run(state, batches(), start_step=start,
+                          cursor_fn=lambda: {"part": 0, "group": 0},
+                          install_signals=True)
+    for m in res.metrics_history[-5:]:
+        print({k: round(v, 5) if isinstance(v, float) else v for k, v in m.items()})
+    print(f"ran {res.steps_run} steps"
+          + (f", resumed from {res.resumed_from}" if res.resumed_from else "")
+          + (", PREEMPTED" if res.preempted else ""))
+    if res.straggler_events:
+        print(f"straggler events: {len(res.straggler_events)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

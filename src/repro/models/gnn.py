@@ -1,0 +1,134 @@
+"""GIN (Graph Isomorphism Network, arXiv:1810.00826) in JAX.
+
+Message passing is `jax.ops.segment_sum` over an edge list — exactly the
+paper's (RecIS's) segment-reduction hot-spot, so the Pallas
+`segment_reduce` kernel is reusable here (DESIGN.md §6 applicability).
+
+Layer:  h' = MLP_l((1 + eps_l) * h + Σ_{u→v} h_u)
+
+Distribution modes (chosen per shape by the config):
+  * edge_parallel — full-graph training (Cora / ogbn-products): node
+    features replicated on every chip, the edge list sharded; each chip
+    computes a partial aggregation and a psum over the whole mesh merges
+    them. The psum doubles as gradient sync (single global graph).
+  * data_parallel — batched small graphs (molecule) and sampled
+    subgraphs (Reddit minibatch): each chip owns whole (sub)graphs,
+    standard DP.
+
+Graph-level readout = Σ_l Linear_l(sum-pool(h_l)) (GIN's jumping
+knowledge); node-level tasks use a head on the final layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import MIXED, Precision, dense_apply, dense_pspec, make_dense
+
+
+class GraphBatch(NamedTuple):
+    feats: jax.Array       # (N, d_feat) float32
+    edge_src: jax.Array    # (E,) int32
+    edge_dst: jax.Array    # (E,) int32
+    edge_mask: jax.Array   # (E,) bool — padding
+    node_graph: jax.Array  # (N,) int32 — graph id per node (readout)
+    node_mask: jax.Array   # (N,) bool
+    labels: jax.Array      # (n_graphs,) or (N,) int32
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_feat: int = 1433
+    n_classes: int = 7
+    task: str = "node"  # node | graph
+    eps_learnable: bool = True
+
+
+def init(rng, cfg: GINConfig) -> dict:
+    keys = jax.random.split(rng, 2 * cfg.n_layers + 2)
+    p = {"encoder": make_dense(keys[0], cfg.d_feat, cfg.d_hidden)}
+    for l in range(cfg.n_layers):
+        p[f"layer{l}"] = {
+            "mlp1": make_dense(keys[2 * l + 1], cfg.d_hidden, cfg.d_hidden),
+            "mlp2": make_dense(keys[2 * l + 2], cfg.d_hidden, cfg.d_hidden),
+            "eps": jnp.zeros((), jnp.float32),
+        }
+        if cfg.task == "graph":
+            p[f"readout{l}"] = make_dense(
+                jax.random.fold_in(keys[-1], l), cfg.d_hidden, cfg.n_classes
+            )
+    p["head"] = make_dense(keys[-2], cfg.d_hidden, cfg.n_classes)
+    return p
+
+
+def pspec(cfg: GINConfig) -> dict:
+    p = {"encoder": dense_pspec(), "head": dense_pspec()}
+    for l in range(cfg.n_layers):
+        p[f"layer{l}"] = {"mlp1": dense_pspec(), "mlp2": dense_pspec(), "eps": P()}
+        if cfg.task == "graph":
+            p[f"readout{l}"] = dense_pspec()
+    return p
+
+
+def _aggregate(h, src, dst, mask, n_nodes, psum_axes=None, use_pallas=False):
+    msg = h[src] * mask[:, None].astype(h.dtype)
+    if use_pallas:
+        from repro.kernels.segment_reduce import ops as sr_ops
+
+        agg = sr_ops.segment_sum(msg, jnp.where(mask, dst, n_nodes), n_nodes)
+    else:
+        agg = jax.ops.segment_sum(msg, jnp.where(mask, dst, n_nodes), num_segments=n_nodes)
+    if psum_axes:
+        agg = jax.lax.psum(agg, psum_axes)
+    return agg
+
+
+def apply(
+    params: dict,
+    cfg: GINConfig,
+    g: GraphBatch,
+    psum_axes=None,          # set inside shard_map for edge_parallel mode
+    prec: Precision = MIXED,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Returns logits: (N, C) for node task, (n_graphs, C) for graph task."""
+    n = g.feats.shape[0]
+    h = dense_apply(params["encoder"], prec.cast(g.feats), prec)
+    h = h * g.node_mask[:, None].astype(h.dtype)
+    readout = None
+    for l in range(cfg.n_layers):
+        lp = params[f"layer{l}"]
+        agg = _aggregate(h, g.edge_src, g.edge_dst, g.edge_mask, n, psum_axes, use_pallas)
+        z = (1.0 + lp["eps"]).astype(h.dtype) * h + agg
+        z = jax.nn.relu(dense_apply(lp["mlp1"], z, prec))
+        h = jax.nn.relu(dense_apply(lp["mlp2"], z, prec))
+        h = h * g.node_mask[:, None].astype(h.dtype)
+        if cfg.task == "graph":
+            n_graphs = g.labels.shape[0]
+            pooled = jax.ops.segment_sum(
+                h, jnp.where(g.node_mask, g.node_graph, n_graphs), num_segments=n_graphs
+            )
+            r = dense_apply(params[f"readout{l}"], pooled, prec)
+            readout = r if readout is None else readout + r
+    if cfg.task == "graph":
+        return readout.astype(jnp.float32)
+    return dense_apply(params["head"], h, prec).astype(jnp.float32)
+
+
+def loss_fn(params, cfg: GINConfig, g: GraphBatch, prec: Precision = MIXED,
+            psum_axes=None, use_pallas: bool = False) -> jax.Array:
+    logits = apply(params, cfg, g, psum_axes, prec, use_pallas)
+    labels = g.labels.astype(jnp.int32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[:, None], axis=-1)[:, 0]
+    per = lse - gold
+    if cfg.task == "node":
+        m = (g.node_mask & (labels >= 0)).astype(per.dtype)  # -1 = unlabeled
+        return (per * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return per.mean()

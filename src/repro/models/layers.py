@@ -1,0 +1,148 @@
+"""Dense-side building blocks (paper §2.2.3: the compute-bound component).
+
+No flax/haiku: params are plain nested dicts, every module is an
+``init(rng, ...) -> params`` plus a pure ``apply``. A parallel "pspec tree"
+with identical structure carries `jax.sharding.PartitionSpec`s so pjit can
+shard params Megatron-style (TP over the "model" axis).
+
+Mixed precision follows the paper: params live in fp32, dense compute runs
+in bf16 (`Precision.compute_dtype`), losses/reductions accumulate in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+
+    def cast(self, x):
+        return x.astype(self.compute_dtype)
+
+
+FP32 = Precision(compute_dtype=jnp.float32)
+MIXED = Precision()
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return jax.random.uniform(rng, (d_in, d_out), dtype, -s, s)
+
+
+def make_dense(rng, d_in: int, d_out: int, bias: bool = True) -> dict:
+    p = {"w": dense_init(rng, d_in, d_out)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_pspec(in_spec=None, out_spec=None, bias: bool = True) -> dict:
+    p = {"w": P(in_spec, out_spec)}
+    if bias:
+        p["b"] = P(out_spec)
+    return p
+
+
+def dense_apply(p: dict, x: jax.Array, prec: Precision = MIXED) -> jax.Array:
+    y = prec.cast(x) @ prec.cast(p["w"])
+    if "b" in p:
+        y = y + prec.cast(p["b"])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def make_rmsnorm(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm_apply(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def make_layernorm(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm_apply(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def make_mlp(rng, dims: tuple[int, ...], bias: bool = True) -> dict:
+    """dims = (d_in, h1, ..., d_out); ReLU between layers (recsys style)."""
+    keys = jax.random.split(rng, len(dims) - 1)
+    return {f"l{i}": make_dense(k, dims[i], dims[i + 1], bias) for i, k in enumerate(keys)}
+
+
+def mlp_pspec(dims: tuple[int, ...], bias: bool = True) -> dict:
+    return {f"l{i}": dense_pspec(None, None, bias) for i in range(len(dims) - 1)}
+
+
+def mlp_apply(p: dict, x: jax.Array, prec: Precision = MIXED, final_act: bool = False) -> jax.Array:
+    n = len(p)
+    for i in range(n):
+        x = dense_apply(p[f"l{i}"], x, prec)
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def make_swiglu(rng, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "gate": make_dense(k1, d_model, d_ff, bias=False),
+        "up": make_dense(k2, d_model, d_ff, bias=False),
+        "down": make_dense(k3, d_ff, d_model, bias=False),
+    }
+
+
+def swiglu_pspec() -> dict:
+    # Megatron TP: column-parallel in (shard d_ff), row-parallel out.
+    return {
+        "gate": dense_pspec(None, "model", bias=False),
+        "up": dense_pspec(None, "model", bias=False),
+        "down": dense_pspec("model", None, bias=False),
+    }
+
+
+def swiglu_apply(p: dict, x: jax.Array, prec: Precision = MIXED) -> jax.Array:
+    g = jax.nn.silu(dense_apply(p["gate"], x, prec))
+    u = dense_apply(p["up"], x, prec)
+    return dense_apply(p["down"], g * u, prec)
+
+
+# ---------------------------------------------------------------------------
+# small dense embeddings (positions etc. — NOT the sparse engine)
+# ---------------------------------------------------------------------------
+
+def make_embedding(rng, n: int, dim: int) -> dict:
+    return {"table": jax.random.normal(rng, (n, dim), jnp.float32) * 0.02}
+
+
+def embedding_apply(p: dict, ids: jax.Array, prec: Precision = MIXED) -> jax.Array:
+    return prec.cast(p["table"][ids])

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN with sort-based Expert Parallelism (EP).
+
+Experts are sharded over the "model" mesh axis (E_local = E / tp per chip).
+Dispatch is the TPU-native sort-based scheme (DESIGN.md §5):
+
+  tokens (seq-sharded over "model")
+    → router top-k → assignments
+    → bucket-by-destination (static send capacity)    ──all_to_all──→
+    → owner: sort by local expert, pad to expert capacity
+    → batched expert SwiGLU  (one einsum over [E_local, C_exp, d])
+    ←──all_to_all── results → weighted combine per token
+
+No MegaBlocks-style block-sparse GEMM is needed: the per-expert capacity
+buffer turns the ragged grouped GEMM into a dense batched einsum the MXU
+runs at full tilt; the capacity slack (×`capacity_factor`) is the price,
+and overflow-dropped tokens are counted, mirroring GShard semantics.
+
+Shared experts (Qwen-MoE / DeepSeek style) run as one fused SwiGLU of width
+``n_shared * d_ff`` on every token. The auxiliary load-balance loss is the
+Switch LBL, psum'd over the EP group.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bucketing import bucketize, scatter_to_buckets
+from repro.models.layers import MIXED, Precision
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    def n_local_experts(self, ep_size: int) -> int:
+        """Experts per EP shard; non-divisible counts (Qwen's 60 over 16)
+        are padded with never-routed experts — the router only scores the
+        real ``n_experts``."""
+        return -(-self.n_experts // ep_size)
+
+
+def make_moe(rng, cfg: MoEConfig, n_local_experts: int) -> dict:
+    """Per-EP-shard params: experts stacked on axis 0 (local slice)."""
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    e, d, f = n_local_experts, cfg.d_model, cfg.d_ff
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "router": jax.random.uniform(k4, (d, cfg.n_experts), jnp.float32, -s, s),
+        "gate": jax.random.uniform(k1, (e, d, f), jnp.float32, -s, s),
+        "up": jax.random.uniform(k2, (e, d, f), jnp.float32, -s, s),
+        "down": jax.random.uniform(k3, (e, f, d), jnp.float32, -1 / np.sqrt(f), 1 / np.sqrt(f)),
+    }
+    if cfg.n_shared:
+        fs = cfg.n_shared * f
+        p["shared"] = {
+            "gate": jax.random.uniform(k5, (d, fs), jnp.float32, -s, s),
+            "up": jax.random.uniform(jax.random.fold_in(k5, 1), (d, fs), jnp.float32, -s, s),
+            "down": jax.random.uniform(jax.random.fold_in(k5, 2), (fs, d), jnp.float32, -1 / np.sqrt(fs), 1 / np.sqrt(fs)),
+        }
+    return p
+
+
+def moe_pspec(cfg: MoEConfig) -> dict:
+    """Experts sharded over "model" on the stacked axis; router replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    p = {
+        "router": P(None, None),
+        "gate": P("model", None, None),
+        "up": P("model", None, None),
+        "down": P("model", None, None),
+    }
+    if cfg.n_shared:
+        p["shared"] = {"gate": P(None, "model"), "up": P(None, "model"), "down": P("model", None)}
+    return p
+
+
+def moe_apply_local(
+    p: dict,
+    cfg: MoEConfig,
+    x: jax.Array,              # (N_local, d) this EP-shard's tokens
+    ep_axis,                   # mesh axis name(s) for EP
+    ep_size: int,
+    prec: Precision = MIXED,
+) -> tuple[jax.Array, jax.Array, dict]:
+    """Runs INSIDE shard_map. Returns (y (N,d), aux_loss, metrics)."""
+    n, d = x.shape
+    e_local = cfg.n_local_experts(ep_size)
+    k = cfg.top_k
+
+    # ---- router (fp32 for numerics)
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)                       # (N, E)
+    top_w, top_e = jax.lax.top_k(probs, k)                        # (N, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch load-balance loss over the global token set
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    ce_local = jnp.zeros((cfg.n_experts,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    denom = jax.lax.psum(jnp.float32(n * k), ep_axis)
+    ce = jax.lax.psum(ce_local, ep_axis) / denom
+    me = jax.lax.pmean(me, ep_axis)
+    aux = cfg.router_aux_weight * cfg.n_experts * jnp.sum(me * ce)
+
+    # ---- assignments → destination EP rank
+    a_e = top_e.reshape(-1).astype(jnp.int32)                     # (N*k,)
+    a_t = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    a_w = top_w.reshape(-1)
+    dest = a_e // e_local
+    c_send = int(np.ceil(n * k / ep_size * cfg.capacity_factor))
+    c_send = max(8, -(-c_send // 8) * 8)
+    bucket, pos, ok = bucketize(dest, ep_size, c_send)
+    send_x = scatter_to_buckets(x[a_t] * ok[:, None].astype(x.dtype), bucket, pos, ok, ep_size, c_send)
+    send_e = scatter_to_buckets(jnp.where(ok, a_e % e_local, e_local), bucket, pos, ok, ep_size, c_send, fill=e_local)
+
+    recv_x = jax.lax.all_to_all(send_x, ep_axis, 0, 0, tiled=True)   # (ep, C, d)
+    recv_e = jax.lax.all_to_all(send_e, ep_axis, 0, 0, tiled=True)   # (ep, C)
+
+    # ---- owner side: group by local expert into capacity buffers
+    flat_x = recv_x.reshape(-1, d)
+    flat_e = recv_e.reshape(-1)
+    n_recv = flat_e.shape[0]
+    c_exp = int(np.ceil(n_recv / e_local * cfg.capacity_factor))
+    c_exp = max(8, -(-c_exp // 8) * 8)
+    eb, epos, eok = bucketize(flat_e, e_local, c_exp)
+    xb = scatter_to_buckets(flat_x, eb, epos, eok, e_local, c_exp)   # (E_l, C_e, d)
+
+    # ---- batched expert SwiGLU on the MXU
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", prec.cast(xb), prec.cast(p["gate"])))
+    u = jnp.einsum("ecd,edf->ecf", prec.cast(xb), prec.cast(p["up"]))
+    y = jnp.einsum("ecf,efd->ecd", g * u, prec.cast(p["down"]))      # (E_l, C_e, d)
+
+    # ---- un-group → return trip → weighted combine
+    y_flat = y[eb, epos] * eok[:, None].astype(y.dtype)              # (n_recv, d)
+    back = jax.lax.all_to_all(y_flat.reshape(ep_size, c_send, d), ep_axis, 0, 0, tiled=True)
+    y_a = back[bucket, pos] * ok[:, None].astype(y.dtype)            # (N*k, d)
+    y_tok = jnp.zeros((n, d), y.dtype).at[a_t].add(y_a * a_w[:, None].astype(y.dtype))
+
+    if cfg.n_shared:
+        sh = p["shared"]
+        gs = jax.nn.silu(prec.cast(x) @ prec.cast(sh["gate"]))
+        us = prec.cast(x) @ prec.cast(sh["up"])
+        y_tok = y_tok + (gs * us) @ prec.cast(sh["down"])
+
+    metrics = {
+        "moe_dropped_send": (~ok).sum(dtype=jnp.int32),
+        "moe_dropped_expert": ((flat_e < e_local) & ~eok).sum(dtype=jnp.int32),
+    }
+    return y_tok.astype(x.dtype), aux, metrics

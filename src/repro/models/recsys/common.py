@@ -1,0 +1,25 @@
+"""Shared recsys plumbing: batch conventions + losses.
+
+A recsys batch is {feature_name: Ragged}; the Embedding Engine turns the
+categorical columns into pooled activations, the Feature Engine passes raw
+numerics through. CTR models read a "label" raw column; sequential models
+(SASRec / MIND) build their targets from pos/neg item columns that share
+the item embedding table (FeatureSpec.shared_table).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bce_with_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Numerically-stable sigmoid cross-entropy, mean over batch."""
+    z, y = logits.astype(jnp.float32), labels.astype(jnp.float32)
+    per = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return per.mean()
+
+
+def sampled_softmax_loss(pos_logit: jax.Array, neg_logits: jax.Array) -> jax.Array:
+    """(B,), (B, n_neg) → mean CE of the positive among 1+n_neg candidates."""
+    all_l = jnp.concatenate([pos_logit[:, None], neg_logits], axis=1).astype(jnp.float32)
+    return (jax.nn.logsumexp(all_l, axis=1) - all_l[:, 0]).mean()

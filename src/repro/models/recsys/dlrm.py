@@ -1,0 +1,100 @@
+"""DLRM (arXiv:1906.00091), MLPerf config: 13 dense + 26 categorical,
+embed_dim 128, bottom MLP 13-512-256-128, dot interaction, top MLP
+1024-1024-512-256-1. The 26 tables are served by the Embedding Engine as
+one merged dim-128 group (the paper's aggregation) — the engine's
+all-to-all exchange IS the DLRM embedding all-to-all.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.feature_engine import FeatureSpec
+from repro.models.layers import MIXED, Precision, make_mlp, mlp_apply, mlp_pspec
+from repro.models.recsys.common import bce_with_logits
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    bot_mlp: tuple[int, ...] = (512, 256, 128)
+    top_mlp: tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    vocab_per_feature: int = 4_000_000  # Criteo-1TB scale (hashed)
+
+
+def feature_specs(cfg: DLRMConfig) -> list[FeatureSpec]:
+    specs = [
+        FeatureSpec(f"cat_{i}", transform="hash", emb_dim=cfg.embed_dim, pooling="sum")
+        for i in range(cfg.n_sparse)
+    ]
+    specs.append(FeatureSpec("dense", transform="raw", max_len=cfg.n_dense))
+    specs.append(FeatureSpec("label", transform="raw", max_len=1))
+    return specs
+
+
+def init(rng, cfg: DLRMConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    n_pairs = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+    top_in = cfg.bot_mlp[-1] + n_pairs
+    return {
+        "bot": make_mlp(k1, (cfg.n_dense,) + cfg.bot_mlp),
+        "top": make_mlp(k2, (top_in,) + cfg.top_mlp),
+    }
+
+
+def pspec(cfg: DLRMConfig) -> dict:
+    return {
+        "bot": mlp_pspec((cfg.n_dense,) + cfg.bot_mlp),
+        "top": mlp_pspec((cfg.bot_mlp[-1] + (cfg.n_sparse + 1) * cfg.n_sparse // 2,) + cfg.top_mlp),
+    }
+
+
+def _interact(vecs: jax.Array) -> jax.Array:
+    """vecs: (B, F, d) → lower-triangle pairwise dots (B, F(F-1)/2)."""
+    b, f, d = vecs.shape
+    z = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+    iu, ju = jnp.tril_indices(f, k=-1)
+    return z[:, iu, ju]
+
+
+def apply(params: dict, cfg: DLRMConfig, acts: dict, dense: dict,
+          prec: Precision = MIXED) -> jax.Array:
+    """Returns logits (B,)."""
+    x_dense = dense["dense"]                                 # (B, 13)
+    bot = mlp_apply(params["bot"], prec.cast(x_dense), prec, final_act=True)
+    emb = jnp.stack([acts[f"cat_{i}"] for i in range(cfg.n_sparse)], axis=1)
+    vecs = jnp.concatenate([prec.cast(emb), bot[:, None, :]], axis=1)  # (B, 27, d)
+    inter = _interact(vecs)
+    top_in = jnp.concatenate([bot, inter], axis=-1)
+    return mlp_apply(params["top"], top_in, prec)[:, 0].astype(jnp.float32)
+
+
+def loss(params, cfg: DLRMConfig, acts, dense, prec: Precision = MIXED) -> jax.Array:
+    logits = apply(params, cfg, acts, dense, prec)
+    return bce_with_logits(logits, dense["label"][:, 0])
+
+
+def score_candidates(params: dict, cfg: DLRMConfig, acts: dict, dense: dict,
+                     cand_rows: jax.Array, prec: Precision = MIXED) -> jax.Array:
+    """Retrieval scoring: one user (B=1 features) × Nc candidate item rows.
+
+    The candidate embedding replaces feature cat_0; user-side work (bottom
+    MLP, user-user dots) is computed once and broadcast — the whole sweep
+    is batched GEMMs, never a loop.
+    """
+    nc, d = cand_rows.shape
+    bot = mlp_apply(params["bot"], prec.cast(dense["dense"]), prec, final_act=True)  # (1, d)
+    user = jnp.stack([acts[f"cat_{i}"] for i in range(1, cfg.n_sparse)], axis=1)
+    user = jnp.concatenate([prec.cast(user), bot[:, None, :]], axis=1)[0]  # (F_u, d)
+    f_u = user.shape[0]
+    uu = jnp.einsum("fd,gd->fg", user, user)
+    iu, ju = jnp.tril_indices(f_u, k=-1)
+    uu_flat = jnp.broadcast_to(uu[iu, ju][None], (nc, iu.shape[0]))
+    uc = prec.cast(cand_rows) @ user.T                       # (Nc, F_u)
+    inter = jnp.concatenate([uc, uu_flat], axis=-1)          # order: cand-user pairs first
+    top_in = jnp.concatenate([jnp.broadcast_to(bot, (nc, bot.shape[-1])), inter], axis=-1)
+    return mlp_apply(params["top"], top_in, prec)[:, 0].astype(jnp.float32)

@@ -1,0 +1,122 @@
+"""MIND (arXiv:1904.08030): multi-interest network with dynamic routing.
+
+embed_dim 64, 4 interest capsules, 3 routing iterations. Behavior-to-
+Interest (B2I) dynamic routing extracts K interest capsules from the
+behavior sequence; label-aware attention (power p=2) picks the mixture for
+the target item. Training = sampled-softmax over (pos, negs); retrieval =
+max-over-interests dot scores against the candidate pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.feature_engine import FeatureSpec
+from repro.models.layers import MIXED, Precision, dense_apply, dense_pspec, make_dense
+from repro.models.recsys.common import sampled_softmax_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    n_neg: int = 4
+    label_pow: float = 2.0
+    vocab: int = 10_000_000
+
+
+def feature_specs(cfg: MINDConfig) -> list[FeatureSpec]:
+    d = cfg.embed_dim
+    return [
+        FeatureSpec("hist_items", transform="hash", emb_dim=d, pooling="none",
+                    max_len=cfg.seq_len, shared_table="items"),
+        FeatureSpec("target_item", transform="hash", emb_dim=d, pooling="sum",
+                    shared_table="items"),
+        FeatureSpec("neg_items", transform="hash", emb_dim=d, pooling="none",
+                    max_len=cfg.n_neg, shared_table="items"),
+    ]
+
+
+def init(rng, cfg: MINDConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    d = cfg.embed_dim
+    return {
+        "S": jax.random.normal(k1, (d, d), jnp.float32) / jnp.sqrt(d),  # shared bilinear
+        "out": make_dense(k2, d, d),
+    }
+
+
+def pspec(cfg: MINDConfig) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    return {"S": P(None, None), "out": dense_pspec()}
+
+
+def _squash(v: jax.Array) -> jax.Array:
+    n2 = jnp.sum(v * v, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * v * jax.lax.rsqrt(n2 + 1e-9)
+
+
+def interests(params, cfg: MINDConfig, hist: jax.Array, prec: Precision = MIXED) -> jax.Array:
+    """B2I dynamic routing. hist: (B, T, d) → capsules (B, K, d)."""
+    b, t, d = hist.shape
+    k = cfg.n_interests
+    mask = jnp.any(hist != 0.0, axis=-1)                       # (B, T)
+    e = prec.cast(hist) @ prec.cast(params["S"])               # (B, T, d)
+    # fixed routing-logit init (paper: random, shared across batch)
+    key = jax.random.PRNGKey(17)
+    logits0 = jax.random.normal(key, (k, t), jnp.float32)
+
+    def routing_iter(i, carry):
+        logits = carry                                          # (B, K, T)
+        w = jax.nn.softmax(logits, axis=1)                      # over capsules
+        w = w * mask[:, None, :].astype(w.dtype)
+        caps = _squash(jnp.einsum("bkt,btd->bkd", w, e.astype(jnp.float32)))
+        logits = logits + jnp.einsum("bkd,btd->bkt", caps, e.astype(jnp.float32))
+        return logits
+
+    logits = jnp.broadcast_to(logits0[None], (b, k, t))
+    logits = jax.lax.fori_loop(0, cfg.capsule_iters, routing_iter, logits)
+    w = jax.nn.softmax(logits, axis=1) * mask[:, None, :].astype(jnp.float32)
+    caps = _squash(jnp.einsum("bkt,btd->bkd", w, e.astype(jnp.float32)))
+    caps = jax.nn.relu(dense_apply(params["out"], prec.cast(caps), prec)).astype(jnp.float32)
+    return caps                                                 # (B, K, d)
+
+
+def _label_aware(caps: jax.Array, target: jax.Array, p: float) -> jax.Array:
+    """caps (B,K,d), target (B,d) → user vector (B,d)."""
+    s = jnp.einsum("bkd,bd->bk", caps, target)
+    a = jax.nn.softmax(jnp.power(jnp.abs(s) + 1e-9, p) * jnp.sign(s), axis=-1)
+    return jnp.einsum("bk,bkd->bd", a, caps)
+
+
+def apply(params, cfg: MINDConfig, acts: dict, dense: dict,
+          prec: Precision = MIXED) -> jax.Array:
+    """Serving: label-aware-attended user vector · target item."""
+    caps = interests(params, cfg, acts["hist_items"], prec)
+    tgt = acts["target_item"].astype(jnp.float32)
+    user = _label_aware(caps, tgt, cfg.label_pow)
+    return jnp.einsum("bd,bd->b", user, tgt)
+
+
+def loss(params, cfg: MINDConfig, acts: dict, dense: dict,
+         prec: Precision = MIXED) -> jax.Array:
+    caps = interests(params, cfg, acts["hist_items"], prec)
+    tgt = acts["target_item"].astype(jnp.float32)               # (B, d)
+    user = _label_aware(caps, tgt, cfg.label_pow)               # (B, d)
+    pos_logit = jnp.einsum("bd,bd->b", user, tgt)
+    neg = acts["neg_items"].astype(jnp.float32)                 # (B, n_neg, d)
+    neg_logit = jnp.einsum("bd,bnd->bn", user, neg)
+    return sampled_softmax_loss(pos_logit, neg_logit)
+
+
+def score_candidates(params, cfg: MINDConfig, acts: dict, dense: dict,
+                     cand_rows: jax.Array, prec: Precision = MIXED) -> jax.Array:
+    """Retrieval: max over interests of capsule·candidate (B=1)."""
+    caps = interests(params, cfg, acts["hist_items"], prec)     # (1, K, d)
+    s = jnp.einsum("kd,nd->kn", caps[0], cand_rows.astype(jnp.float32))
+    return s.max(axis=0)

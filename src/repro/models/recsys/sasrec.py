@@ -1,0 +1,140 @@
+"""SASRec (arXiv:1808.09781): self-attentive sequential recommendation.
+
+embed_dim 50, 2 blocks, 1 head, seq_len 50. Item embeddings (history,
+positives, sampled negatives) all share one engine table
+(shared_table="items"); training uses the paper's per-position BCE on
+(positive, negative) pairs; serving scores the last hidden state against
+candidate item rows with a plain matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.feature_engine import FeatureSpec
+from repro.models.layers import (
+    MIXED, Precision, dense_apply, dense_pspec, make_dense, make_layernorm,
+    layernorm_apply,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    n_neg: int = 1
+    vocab: int = 10_000_000
+
+
+def feature_specs(cfg: SASRecConfig) -> list[FeatureSpec]:
+    d = cfg.embed_dim
+    return [
+        FeatureSpec("hist_items", transform="hash", emb_dim=d, pooling="none",
+                    max_len=cfg.seq_len, shared_table="items"),
+        FeatureSpec("pos_items", transform="hash", emb_dim=d, pooling="none",
+                    max_len=cfg.seq_len, shared_table="items"),
+        FeatureSpec("neg_items", transform="hash", emb_dim=d, pooling="none",
+                    max_len=cfg.seq_len * cfg.n_neg, shared_table="items"),
+    ]
+
+
+def init(rng, cfg: SASRecConfig) -> dict:
+    d = cfg.embed_dim
+    keys = jax.random.split(rng, 4 * cfg.n_blocks + 1)
+    p = {"pos_emb": jax.random.normal(keys[-1], (cfg.seq_len, d), jnp.float32) * 0.02}
+    for b in range(cfg.n_blocks):
+        k = keys[4 * b: 4 * b + 4]
+        p[f"block{b}"] = {
+            "ln1": make_layernorm(d),
+            "wq": make_dense(k[0], d, d), "wk": make_dense(k[1], d, d),
+            "wv": make_dense(k[2], d, d),
+            "ln2": make_layernorm(d),
+            "ff1": make_dense(k[3], d, d),
+            "ff2": make_dense(jax.random.fold_in(k[3], 1), d, d),
+        }
+    p["final_ln"] = make_layernorm(d)
+    return p
+
+
+def pspec(cfg: SASRecConfig) -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    p = {"pos_emb": P(None, None), "final_ln": {"scale": P(None), "bias": P(None)}}
+    for b in range(cfg.n_blocks):
+        p[f"block{b}"] = {
+            "ln1": {"scale": P(None), "bias": P(None)},
+            "wq": dense_pspec(), "wk": dense_pspec(), "wv": dense_pspec(),
+            "ln2": {"scale": P(None), "bias": P(None)},
+            "ff1": dense_pspec(), "ff2": dense_pspec(),
+        }
+    return p
+
+
+def encode(params: dict, cfg: SASRecConfig, hist: jax.Array, mask: jax.Array,
+           prec: Precision = MIXED) -> jax.Array:
+    """hist: (B, T, d) item embeddings; mask: (B, T). Returns (B, T, d)."""
+    b, t, d = hist.shape
+    x = prec.cast(hist) + prec.cast(params["pos_emb"])[None, :t]
+    x = x * mask[..., None].astype(x.dtype)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    for blk in range(cfg.n_blocks):
+        bp = params[f"block{blk}"]
+        h = layernorm_apply(bp["ln1"], x)
+        q = dense_apply(bp["wq"], h, prec)
+        k = dense_apply(bp["wk"], h, prec)
+        v = dense_apply(bp["wv"], h, prec)
+        s = jnp.einsum("btd,bsd->bts", q, k).astype(jnp.float32) / np.float32(np.sqrt(d))
+        s = jnp.where(causal[None] & mask[:, None, :], s, -1e30)
+        a = jnp.einsum("bts,bsd->btd", prec.cast(jax.nn.softmax(s, -1)), v)
+        x = x + a
+        h = layernorm_apply(bp["ln2"], x)
+        x = x + dense_apply(bp["ff2"], jax.nn.relu(dense_apply(bp["ff1"], h, prec)), prec)
+        x = x * mask[..., None].astype(x.dtype)
+    return layernorm_apply(params["final_ln"], x)
+
+
+def loss(params, cfg: SASRecConfig, acts: dict, dense: dict,
+         prec: Precision = MIXED) -> jax.Array:
+    """Per-position BCE over (pos, neg) as in the paper."""
+    hist = acts["hist_items"]                       # (B, T, d)
+    mask = jnp.any(hist != 0.0, axis=-1)
+    h = encode(params, cfg, hist, mask, prec)       # (B, T, d)
+    pos = prec.cast(acts["pos_items"])              # (B, T, d)
+    neg = prec.cast(acts["neg_items"])              # (B, T*n_neg, d)
+    b, t, d = h.shape
+    neg = neg.reshape(b, t, cfg.n_neg, d)
+    pos_logit = jnp.einsum("btd,btd->bt", h, pos).astype(jnp.float32)
+    neg_logit = jnp.einsum("btd,btnd->btn", h, neg).astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    lp = jax.nn.log_sigmoid(pos_logit) * m
+    ln = jax.nn.log_sigmoid(-neg_logit) * m[..., None]
+    denom = jnp.maximum(m.sum(), 1.0)
+    return -(lp.sum() + ln.sum() / cfg.n_neg) / denom
+
+
+def apply(params, cfg: SASRecConfig, acts: dict, dense: dict,
+          prec: Precision = MIXED) -> jax.Array:
+    """Serving: rank score of the target item (first pos_items entry)."""
+    u = user_repr(params, cfg, acts, prec)               # (B, d)
+    tgt = acts["pos_items"][:, 0, :].astype(jnp.float32)  # (B, d)
+    return jnp.einsum("bd,bd->b", u.astype(jnp.float32), tgt)
+
+
+def user_repr(params, cfg: SASRecConfig, acts: dict, prec: Precision = MIXED) -> jax.Array:
+    """(B, d) — hidden state at the last valid position."""
+    hist = acts["hist_items"]
+    mask = jnp.any(hist != 0.0, axis=-1)
+    h = encode(params, cfg, hist, mask, prec)
+    last = jnp.maximum(mask.sum(-1).astype(jnp.int32) - 1, 0)
+    return jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+
+
+def score_candidates(params, cfg: SASRecConfig, acts: dict, dense: dict,
+                     cand_rows: jax.Array, prec: Precision = MIXED) -> jax.Array:
+    u = user_repr(params, cfg, acts, prec)          # (B, d)
+    return (prec.cast(cand_rows) @ u[0]).astype(jnp.float32)

@@ -1,0 +1,88 @@
+"""Wide & Deep (arXiv:1606.07792): 40 categorical features.
+
+Wide side = per-feature scalar weights — served as a dim-8 engine group
+pooled to a scalar via a learned projection (dim-1 tables are
+lane-hostile on TPU; the projection keeps the wide path's linear
+semantics while staying MXU-aligned — DESIGN.md §2 adaptation (c)).
+Deep side = 40 × dim-32 embeddings → MLP 1024-512-256 → logit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.feature_engine import FeatureSpec
+from repro.models.layers import MIXED, Precision, make_dense, dense_apply, dense_pspec, make_mlp, mlp_apply, mlp_pspec
+from repro.models.recsys.common import bce_with_logits
+
+
+@dataclasses.dataclass(frozen=True)
+class WideDeepConfig:
+    n_sparse: int = 40
+    embed_dim: int = 32
+    wide_dim: int = 8
+    mlp: tuple[int, ...] = (1024, 512, 256)
+    vocab_per_feature: int = 1_000_000
+
+
+def feature_specs(cfg: WideDeepConfig) -> list[FeatureSpec]:
+    specs = []
+    for i in range(cfg.n_sparse):
+        specs.append(FeatureSpec(f"cat_{i}", transform="hash", emb_dim=cfg.embed_dim, pooling="sum"))
+        specs.append(FeatureSpec(
+            f"wide_{i}", transform="hash", emb_dim=cfg.wide_dim, pooling="sum",
+            shared_table=f"wide_tbl_{i}",
+        ))
+    specs.append(FeatureSpec("label", transform="raw", max_len=1))
+    return specs
+
+
+def init(rng, cfg: WideDeepConfig) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "deep": make_mlp(k1, (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp),
+        "deep_out": make_dense(k2, cfg.mlp[-1], 1),
+        "wide_proj": make_dense(k3, cfg.wide_dim, 1),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def pspec(cfg: WideDeepConfig) -> dict:
+    return {
+        "deep": mlp_pspec((cfg.n_sparse * cfg.embed_dim,) + cfg.mlp),
+        "deep_out": dense_pspec(),
+        "wide_proj": dense_pspec(),
+        "bias": jax.sharding.PartitionSpec(),
+    }
+
+
+def apply(params: dict, cfg: WideDeepConfig, acts: dict, dense: dict,
+          prec: Precision = MIXED) -> jax.Array:
+    deep_in = jnp.concatenate([prec.cast(acts[f"cat_{i}"]) for i in range(cfg.n_sparse)], axis=-1)
+    deep = mlp_apply(params["deep"], deep_in, prec, final_act=True)
+    deep_logit = dense_apply(params["deep_out"], deep, prec)[:, 0]
+    wide_sum = sum(prec.cast(acts[f"wide_{i}"]) for i in range(cfg.n_sparse))
+    wide_logit = dense_apply(params["wide_proj"], wide_sum, prec)[:, 0]
+    return (deep_logit + wide_logit).astype(jnp.float32) + params["bias"]
+
+
+def loss(params, cfg: WideDeepConfig, acts, dense, prec: Precision = MIXED) -> jax.Array:
+    return bce_with_logits(apply(params, cfg, acts, dense, prec), dense["label"][:, 0])
+
+
+def score_candidates(params: dict, cfg: WideDeepConfig, acts: dict, dense: dict,
+                     cand_rows: jax.Array, cand_wide: jax.Array,
+                     prec: Precision = MIXED) -> jax.Array:
+    """One user × Nc candidates; candidate replaces cat_0/wide_0."""
+    nc = cand_rows.shape[0]
+    fixed = [prec.cast(acts[f"cat_{i}"]) for i in range(1, cfg.n_sparse)]
+    fixed_cat = jnp.broadcast_to(jnp.concatenate(fixed, -1), (nc, (cfg.n_sparse - 1) * cfg.embed_dim))
+    deep_in = jnp.concatenate([prec.cast(cand_rows), fixed_cat], axis=-1)
+    deep = mlp_apply(params["deep"], deep_in, prec, final_act=True)
+    deep_logit = dense_apply(params["deep_out"], deep, prec)[:, 0]
+    wide_fixed = sum(prec.cast(acts[f"wide_{i}"]) for i in range(1, cfg.n_sparse))
+    wide = prec.cast(cand_wide) + jnp.broadcast_to(wide_fixed, cand_wide.shape)
+    wide_logit = dense_apply(params["wide_proj"], wide, prec)[:, 0]
+    return (deep_logit + wide_logit).astype(jnp.float32) + params["bias"]

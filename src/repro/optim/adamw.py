@@ -1,0 +1,93 @@
+"""Dense-side AdamW with ZeRO-1 sharding specs and optional gradient
+compression (paper §2.2.3 leans on ZeRO; compression is a beyond-paper
+distributed-optimization option for bandwidth-constrained DP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip_norm: float | None = 1.0
+
+
+def init(params: Any) -> dict:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+
+def update(cfg: AdamWConfig, params, grads, state, step):
+    """Returns (new_params, new_state). step is 1-based."""
+    step = step.astype(jnp.float32)
+    if cfg.grad_clip_norm is not None:
+        gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gn, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    bc1 = 1.0 - cfg.b1 ** step
+    bc2 = 1.0 - cfg.b2 ** step
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m1 = cfg.b1 * m + (1 - cfg.b1) * g
+        v1 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m1 / bc1) / (jnp.sqrt(v1 / bc2) + cfg.eps) + cfg.weight_decay * p
+        return (p - cfg.lr * u).astype(p.dtype), m1, v1
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v}
+
+
+def zero1_pspec(param_specs: Any, params: Any, shard_axis: str = "data",
+                min_size: int = 1 << 16) -> Any:
+    """ZeRO-1: optimizer state sharded over the DP axis.
+
+    For each param, take its PartitionSpec and additionally shard the first
+    dimension that is (a) unsharded and (b) divisible-friendly, over
+    ``shard_axis``. Small params stay as-is (sharding tiny tensors is pure
+    overhead)."""
+
+    def one(spec: P, p) -> P:
+        if p.size < min_size:
+            return spec
+        entries = list(spec) + [None] * (p.ndim - len(spec))
+        for i, (e, d) in enumerate(zip(entries, p.shape)):
+            if e is None and d >= 128:
+                entries[i] = shard_axis
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(one, param_specs, params,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (int8 + error feedback) for manual-DP shard_map paths
+# ---------------------------------------------------------------------------
+
+def compressed_psum(g: jax.Array, axes, error: jax.Array):
+    """Quantize to int8 with a per-tensor scale, psum, dequantize; the
+    quantization residual is carried as error feedback (1-bit Adam style).
+    Returns (g_psummed, new_error)."""
+    gf = g.astype(jnp.float32) + error
+    amax = jnp.max(jnp.abs(gf))
+    # one shared scale across the group (a scalar pmax is ~free) so the int8
+    # payloads are commensurable and the psum is exact in int32.
+    scale = jnp.maximum(jax.lax.pmax(amax, axes), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_error = gf - q.astype(jnp.float32) * scale
+    summed = jax.lax.psum(q.astype(jnp.int32), axes).astype(jnp.float32)
+    return summed * scale, new_error

@@ -1,0 +1,80 @@
+"""SparseAdam / SparseAdamW — row-wise lazy optimizers for Blocks (§2.1).
+
+Only the rows touched by the current batch are read, updated, and written
+back (the paper's "Backward Update": gradients + retained forward offsets →
+direct update of Blocks). Moment decay is *lazy* (TF-compatible semantics:
+untouched rows keep their moments unchanged), and bias correction uses the
+global step, matching `tf.compat.v1.train.AdamOptimizer` sparse apply so
+hyper-parameters/weights migrated from the former system align (§1.4.1).
+
+All updates are expressed as masked scatter-*adds* of deltas so that PAD
+entries (offset → overflow row 0 with zero delta) are harmless even when
+duplicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import Blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseAdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0  # > 0 → SparseAdamW (decoupled decay)
+    grad_clip_norm: float | None = None
+
+    @property
+    def slot_names(self) -> tuple[str, ...]:
+        return ("m", "v")
+
+
+def apply_row_updates(
+    cfg: SparseAdamConfig,
+    b: Blocks,
+    offsets: jax.Array,   # (k,) int32 unique rows (pads may repeat row 0)
+    grads: jax.Array,     # (k, dim) fp32 — grad of loss w.r.t. gathered rows
+    valid: jax.Array,     # (k,) bool
+    step: jax.Array,      # () int32/int64 global step, 1-based
+) -> Blocks:
+    """One Adam(W) step on exactly the touched rows."""
+    step = step.astype(jnp.float32)
+    g = grads.astype(jnp.float32)
+    if cfg.grad_clip_norm is not None:
+        gn = jnp.sqrt(jnp.sum(g * g, axis=-1, keepdims=True))
+        g = g * jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gn, 1e-12))
+
+    off = jnp.clip(offsets, 0, b.n_rows - 1)
+    vmask = valid[:, None].astype(jnp.float32)
+    m0 = b.slots["m"][off]
+    v0 = b.slots["v"][off]
+    w0 = b.emb[off]
+
+    m1 = cfg.b1 * m0 + (1.0 - cfg.b1) * g
+    v1 = cfg.b2 * v0 + (1.0 - cfg.b2) * g * g
+    bc1 = 1.0 - cfg.b1 ** step
+    bc2 = 1.0 - cfg.b2 ** step
+    upd = (m1 / bc1) / (jnp.sqrt(v1 / bc2) + cfg.eps)
+    if cfg.weight_decay > 0.0:
+        upd = upd + cfg.weight_decay * w0
+
+    dst = jnp.where(valid, off, b.n_rows)  # invalid → dropped
+    emb = b.emb.at[dst].add(-cfg.lr * upd * vmask, mode="drop")
+    m = b.slots["m"].at[dst].add((m1 - m0) * vmask, mode="drop")
+    v = b.slots["v"].at[dst].add((v1 - v0) * vmask, mode="drop")
+    return Blocks(emb=emb, slots={"m": m, "v": v})
+
+
+class RowGrad(NamedTuple):
+    """A sparse gradient: rows + values, produced by the reverse exchange."""
+
+    offsets: jax.Array  # (k,) int32
+    values: jax.Array   # (k, dim) fp32
+    valid: jax.Array    # (k,) bool

@@ -1,0 +1,204 @@
+"""Pipelines — the component that connects ColumnIO + Feature/Embedding
+Engines + Optimizer + Saver into training workflows (paper §2.1), with the
+1000+-node fault-tolerance posture of DESIGN.md §8:
+
+  * checkpoint/restart     sharded async safetensors + data-cursor resume
+  * preemption safety      SIGTERM → final checkpoint before exit
+  * straggler mitigation   per-step wall-time watchdog (EMA + kσ); slow
+                           steps are logged and (optionally) the data shard
+                           is flagged for the IO layer's work-stealing
+  * eviction windows       stale-feature eviction during continuous training
+  * multistage             interleaved train/eval; online-learning windows
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Iterator, Mapping
+
+import jax
+import numpy as np
+
+from repro.checkpoint import saver as saver_lib
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    total_steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    keep_last: int = 3
+    n_ckpt_shards: int = 4
+    resume: bool = True
+    # straggler watchdog
+    watchdog: bool = True
+    watchdog_k: float = 4.0          # flag steps slower than EMA + k·σ
+    watchdog_warmup: int = 8
+    # eviction (continuous training)
+    evict_every: int = 0             # 0 = off
+    evict_age_steps: int = 1000
+    # eval interleave (multistage)
+    eval_every: int = 0
+    log_every: int = 10
+
+
+class StragglerWatchdog:
+    """EMA + kσ step-time anomaly detector (DESIGN.md §8).
+
+    On a real pod this drives two mitigations: (a) report the slow host to
+    the scheduler, (b) mark its IO shard so AsyncLoader's shared work queue
+    re-balances. Here it records the events for tests/metrics.
+    """
+
+    def __init__(self, k: float = 4.0, warmup: int = 8, alpha: float = 0.1):
+        self.k = k
+        self.warmup = warmup
+        self.alpha = alpha
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.events: list[tuple[int, float, float]] = []  # (step, dt, threshold)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.n += 1
+        if self.n <= self.warmup:
+            # prime the EMA
+            self.mean = dt if self.n == 1 else (1 - self.alpha) * self.mean + self.alpha * dt
+            self.var = (1 - self.alpha) * self.var + self.alpha * (dt - self.mean) ** 2
+            return False
+        thresh = self.mean + self.k * max(np.sqrt(self.var), 0.05 * self.mean)
+        slow = dt > thresh
+        if slow:
+            self.events.append((step, dt, thresh))
+        else:  # only non-anomalous steps update the baseline
+            self.mean = (1 - self.alpha) * self.mean + self.alpha * dt
+            self.var = (1 - self.alpha) * self.var + self.alpha * (dt - self.mean) ** 2
+        return slow
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT → checkpoint-and-exit flag (preemption safety)."""
+
+    def __init__(self, install: bool = True):
+        self.requested = False
+        self._prev = {}
+        if install:
+            for sig in (signal.SIGTERM,):
+                try:
+                    self._prev[sig] = signal.signal(sig, self._handler)
+                except ValueError:  # non-main thread (tests)
+                    pass
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def restore(self):
+        for sig, h in self._prev.items():
+            signal.signal(sig, h)
+
+
+@dataclasses.dataclass
+class TrainResult:
+    state: Any
+    steps_run: int
+    metrics_history: list[dict]
+    straggler_events: list
+    resumed_from: int | None
+    preempted: bool = False
+
+
+class Trainer:
+    """Drives a Cell's step function over a data stream with full FT.
+
+    ``cell.step_fn`` has signature (state, batch) → (state, metrics) when
+    ``cell.returns_state`` else (state, batch) → metrics (serve cells).
+    """
+
+    def __init__(self, cell, cfg: TrainConfig,
+                 evict_fn: Callable[[Any, int], Any] | None = None):
+        self.cell = cell
+        self.cfg = cfg
+        self.evict_fn = evict_fn
+        donate = (0,) if (cell.donate_state and cell.returns_state) else ()
+        self._jit_step = jax.jit(cell.step_fn, donate_argnums=donate)
+        self.saver = (saver_lib.AsyncSaver(cfg.ckpt_dir, cfg.n_ckpt_shards,
+                                           cfg.keep_last)
+                      if cfg.ckpt_dir else None)
+        self.watchdog = StragglerWatchdog(cfg.watchdog_k, cfg.watchdog_warmup)
+
+    # -- checkpoint glue ----------------------------------------------------
+    def _save(self, state, step: int, cursor: Mapping | None, blocking=False):
+        if self.saver is None:
+            return
+        payload = {"state": state,
+                   "cursor": {"part": 0, "group": 0, **(cursor or {})},
+                   "saved_step": np.int64(step)}
+        self.saver.save(payload, step)
+        if blocking:
+            self.saver.wait()
+
+    def try_resume(self, init_state) -> tuple[Any, int, Mapping | None]:
+        """→ (state, start_step, data_cursor). Falls back to fresh init."""
+        if not (self.cfg.ckpt_dir and self.cfg.resume):
+            return init_state, 0, None
+        step = saver_lib.latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return init_state, 0, None
+        like = {"state": init_state, "cursor": {"part": 0, "group": 0},
+                "saved_step": np.int64(0)}
+        restored = saver_lib.restore(self.cfg.ckpt_dir, like, step)
+        return restored["state"], int(restored["saved_step"]), restored["cursor"]
+
+    # -- the loop -------------------------------------------------------------
+    def run(self, state, batches: Iterator, start_step: int = 0,
+            cursor_fn: Callable[[], Mapping] | None = None,
+            eval_fn: Callable[[Any, int], Mapping] | None = None,
+            install_signals: bool = False) -> TrainResult:
+        cfg = self.cfg
+        guard = PreemptionGuard(install=install_signals)
+        history: list[dict] = []
+        step = start_step
+        preempted = False
+        resumed_from = start_step if start_step else None
+
+        for batch in batches:
+            if step >= cfg.total_steps:
+                break
+            t0 = time.perf_counter()
+            if self.cell.returns_state:
+                state, metrics = self._jit_step(state, batch)
+            else:
+                metrics = self._jit_step(state, batch)
+            jax.block_until_ready(metrics)
+            dt = time.perf_counter() - t0
+            step += 1
+
+            slow = cfg.watchdog and self.watchdog.observe(step, dt)
+            if step % cfg.log_every == 0 or slow:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()
+                     if np.ndim(v) == 0}
+                m.update(step=step, wall_s=dt, straggler=bool(slow))
+                history.append(m)
+
+            if cfg.evict_every and self.evict_fn and step % cfg.evict_every == 0:
+                state = self.evict_fn(state, max(step - cfg.evict_age_steps, 0))
+
+            if eval_fn and cfg.eval_every and step % cfg.eval_every == 0:
+                history.append({"step": step, **{f"eval_{k}": v for k, v in
+                                                 eval_fn(state, step).items()}})
+
+            if cfg.ckpt_every and step % cfg.ckpt_every == 0:
+                self._save(state, step, cursor_fn() if cursor_fn else None)
+
+            if guard.requested:
+                preempted = True
+                break
+
+        # final (or preemption) checkpoint — blocking, then restore handlers
+        self._save(state, step, cursor_fn() if cursor_fn else None, blocking=True)
+        guard.restore()
+        return TrainResult(state=state, steps_run=step - start_step,
+                           metrics_history=history,
+                           straggler_events=self.watchdog.events,
+                           resumed_from=resumed_from, preempted=preempted)

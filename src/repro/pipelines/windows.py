@@ -1,0 +1,74 @@
+"""Online-learning windows & multistage / multitask pipelines (paper §2.1).
+
+  * ``OnlineWindowPipeline`` — continuous training over a stream of table
+    *windows* (e.g. hourly partitions): train window k, evaluate on window
+    k+1 before training it (the industry-standard "one-pass" protocol),
+    evicting stale embedding rows between windows.
+  * ``MultiTaskHead`` — shared-bottom multitask: several losses over shared
+    activations, one backward pass (the trainer sees a single scalar).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pipelines.trainer import TrainConfig, Trainer
+
+
+@dataclasses.dataclass
+class WindowResult:
+    window: int
+    pre_eval: dict          # metrics on this window BEFORE training it
+    train_metrics: list
+
+
+class OnlineWindowPipeline:
+    """Train→advance over windowed data with between-window eviction.
+
+    ``make_window_iter(w)`` yields batches of window w; ``eval_step`` is a
+    jitted (state, batch) → metrics serve-mode function.
+    """
+
+    def __init__(self, trainer: Trainer, make_window_iter: Callable[[int], Iterator],
+                 eval_step: Callable[[Any, Any], dict] | None = None,
+                 steps_per_window: int = 50):
+        self.trainer = trainer
+        self.make_window_iter = make_window_iter
+        self.eval_step = eval_step
+        self.steps_per_window = steps_per_window
+
+    def run(self, state, n_windows: int) -> tuple[Any, list[WindowResult]]:
+        results = []
+        step0 = 0
+        for w in range(n_windows):
+            pre = {}
+            if self.eval_step is not None:
+                batch = next(iter(self.make_window_iter(w)))
+                pre = {k: float(np.asarray(v)) for k, v in
+                       self.eval_step(state, batch).items() if np.ndim(v) == 0}
+            self.trainer.cfg.total_steps = step0 + self.steps_per_window
+            res = self.trainer.run(state, self.make_window_iter(w),
+                                   start_step=step0)
+            state = res.state
+            step0 += res.steps_run
+            # between-window eviction (stale-feature GC, §2.1 Embedding Engine)
+            if self.trainer.evict_fn is not None:
+                state = self.trainer.evict_fn(state, max(step0 - self.trainer.cfg.evict_age_steps, 0))
+            results.append(WindowResult(w, pre, res.metrics_history))
+        return state, results
+
+
+def multitask_loss(
+    task_losses: dict[str, jax.Array],
+    weights: dict[str, float] | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Weighted multitask scalarization; returns (total, per-task detached)."""
+    weights = weights or {}
+    total = jnp.float32(0.0)
+    for name, l in task_losses.items():
+        total = total + jnp.float32(weights.get(name, 1.0)) * l
+    return total, {f"loss_{k}": jax.lax.stop_gradient(v) for k, v in task_losses.items()}

@@ -1,0 +1,10 @@
+"""Test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the 1 real CPU device (dry-run isolation rule); multi-device semantics
+are tested via subprocess in test_multidevice.py."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

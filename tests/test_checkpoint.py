@@ -1,0 +1,82 @@
+"""Saver tests: safetensors roundtrip, sharded save/restore, atomic commit,
+async save, elastic re-shard, GC — DESIGN.md §8 checkpoint/restart."""
+import json
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import safetensors_io as st_io, saver
+
+
+def _tree(rng, d=4):
+    return {
+        "dense": {"w": rng.normal(size=(8, d)).astype(np.float32),
+                  "b": rng.normal(size=(d,)).astype(np.float32)},
+        "step": np.int64(7),
+        "emb": rng.normal(size=(16, d)).astype(np.float32),
+    }
+
+
+class TestSafetensors:
+    def test_roundtrip(self, tmp_path, rng):
+        tensors = {"a": rng.normal(size=(3, 5)).astype(np.float32),
+                   "b": np.arange(7, dtype=np.int64)}
+        st_io.save_file(tensors, tmp_path / "x.safetensors", metadata={"k": "v"})
+        out = st_io.load_file(tmp_path / "x.safetensors")
+        for k in tensors:
+            np.testing.assert_array_equal(out[k], tensors[k])
+
+    def test_format_is_real_safetensors(self, tmp_path, rng):
+        """Header must be valid safetensors JSON (zero-copy offsets)."""
+        st_io.save_file({"t": np.zeros((2, 2), np.float32)}, tmp_path / "x.st")
+        raw = (tmp_path / "x.st").read_bytes()
+        hlen = int(np.frombuffer(raw[:8], np.uint64)[0])
+        header = json.loads(raw[8: 8 + hlen])
+        assert header["t"]["dtype"] == "F32"
+        assert header["t"]["shape"] == [2, 2]
+
+
+class TestSaver:
+    def test_save_restore_identity(self, tmp_path, rng):
+        tree = _tree(rng)
+        saver.save(tree, tmp_path, step=10, n_shards=3)
+        out = saver.restore(tmp_path, tree)
+        np.testing.assert_array_equal(out["dense"]["w"], tree["dense"]["w"])
+        assert int(out["step"]) == 7
+
+    def test_elastic_reshard_axis0(self, tmp_path, rng):
+        """Save with one axis-0 multiplicity, restore into another."""
+        tree = {"emb": rng.normal(size=(4, 8, 3)).astype(np.float32)}  # [D=4,...]
+        saver.save(tree, tmp_path, step=1, n_shards=2)
+        like = {"emb": np.zeros((8, 4, 3), np.float32)}                # D'=8
+        out = saver.restore(tmp_path, like)
+        np.testing.assert_array_equal(out["emb"].reshape(4, 8, 3), tree["emb"])
+
+    def test_atomic_commit_and_gc(self, tmp_path, rng):
+        tree = _tree(rng)
+        for s in (1, 2, 3, 4, 5):
+            saver.save(tree, tmp_path, step=s, n_shards=2, keep_last=3)
+        steps = sorted(p.name for p in tmp_path.glob("step_*"))
+        assert len(steps) == 3 and steps[-1].endswith("5".zfill(10))
+        assert not list(tmp_path.glob(".tmp_*"))  # no torn temp dirs
+
+    def test_latest_step(self, tmp_path, rng):
+        assert saver.latest_step(tmp_path) is None
+        saver.save(_tree(rng), tmp_path, step=42, n_shards=1)
+        assert saver.latest_step(tmp_path) == 42
+
+    def test_async_save_overlaps_and_lands(self, tmp_path, rng):
+        a = saver.AsyncSaver(tmp_path, n_shards=2)
+        tree = _tree(rng)
+        a.save(tree, 1)
+        a.wait()
+        out = saver.restore(tmp_path, tree)
+        np.testing.assert_array_equal(out["emb"], tree["emb"])
+
+    def test_restore_jax_arrays(self, tmp_path, rng):
+        tree = {"w": jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))}
+        saver.save(tree, tmp_path, step=1)
+        out = saver.restore(tmp_path, tree)
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(tree["w"]))
