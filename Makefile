@@ -1,0 +1,14 @@
+# Developer entry points. `make test` is the tier-1 verify from ROADMAP.md.
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+export PYTHONPATH
+
+.PHONY: test bench bench-storage
+
+test:
+	python -m pytest -x -q
+
+bench:
+	python -m benchmarks.run
+
+bench-storage:
+	python -m benchmarks.run --only storage

@@ -2,9 +2,11 @@
 
   table1  operator MBU, fused vs unfused        (paper §3.1, Table 1)
   table2  E2E step, sparse vs overall           (paper §3.2, Table 2)
+  storage tiered-store hit-rate/throughput sweep (capacity × policy;
+          emits BENCH_storage.json — DESIGN.md §3)
   roofline summarize dry-run roofline terms     (paper Fig. 2/3; §Roofline)
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table2,roofline]
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table2,storage,roofline]
 """
 from __future__ import annotations
 
@@ -54,6 +56,10 @@ def main(argv=None) -> int:
         from benchmarks import table2_e2e
 
         table2_e2e.run()
+    if "storage" in which or "table3" in which:
+        from benchmarks import table3_storage
+
+        table3_storage.run()
     if "roofline" in which:
         _roofline_summary()
     return 0

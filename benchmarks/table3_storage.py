@@ -1,0 +1,133 @@
+"""Benchmark — tiered embedding storage: cache hit-rate / throughput sweep.
+
+The seed engine had a hard capacity ceiling: once ``rows_per_shard`` filled
+up, new ids fell into the overflow row (zero embedding, no update). The
+tiered store turns that ceiling into a cache-miss COST — this bench
+quantifies it: a zipf(1.1) id stream is trained through device tiers of
+shrinking capacity (fractions of the live working set) under each cache
+policy, against an all-HBM baseline.
+
+Reported per (capacity × policy): hit rate, host/device row split,
+promotions+demotions per step, and step throughput relative to all-HBM.
+Emits ``BENCH_storage.json`` next to the repo root (consumed by
+reports/gen_tables.py-style tooling).
+
+Run: PYTHONPATH=src python -m benchmarks.run --only storage
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding_engine import EmbeddingEngine, EngineConfig
+from repro.core.feature_engine import FeatureSpec
+from repro.io.ragged import Ragged
+from repro.optim.sparse_adam import SparseAdamConfig
+from repro.storage import StorageConfig
+
+DIM = 16
+BATCH_ROWS = 32
+IDS_PER_ROW = 4          # L = 128 ids/step
+VOCAB = 4096             # live working set ≈ VOCAB under zipf(1.1)
+STEPS = 60
+POLICIES = ("lru", "lfu", "freq:2")
+CAPACITY_FRACTIONS = (0.5, 0.25, 0.125)
+SOPT = SparseAdamConfig(lr=1e-3)
+
+
+def _engine(rows_per_shard: int, storage: StorageConfig | None):
+    specs = [FeatureSpec("f", transform="hash", emb_dim=DIM, pooling="sum")]
+    L = BATCH_ROWS * IDS_PER_ROW
+    return EmbeddingEngine(specs, EngineConfig(
+        mesh_axes=(), n_devices=1, rows_per_shard=rows_per_shard,
+        map_capacity_per_shard=4 * rows_per_shard,
+        u_budget=2 * L, per_dest_cap=2 * L, recv_budget=2 * L,
+        storage=storage))
+
+
+def _batches(seed: int = 0):
+    r = np.random.default_rng(seed)
+    k = BATCH_ROWS * IDS_PER_ROW
+    splits = jnp.asarray(
+        np.arange(BATCH_ROWS + 1, dtype=np.int32) * IDS_PER_ROW)
+    for _ in range(STEPS):
+        vals = jnp.asarray((r.zipf(1.1, size=k) % VOCAB).astype(np.int64))
+        yield {"f": Ragged(vals, splits)}
+
+
+def _run(eng: EmbeddingEngine, tiered: bool) -> dict:
+    state = eng.init_state()
+    gkey = next(iter(eng.groups))
+    hit_rates, promoted, demoted = [], [], []
+    row_overflow = 0  # accumulated over ALL steps (per-call counter)
+    t0 = time.perf_counter()
+    for i, ids in enumerate(_batches(), start=1):
+        if tiered:
+            state, met = eng.storage_prefetch(state, ids, i)
+            hit_rates.append(met["hit_rate"])
+            promoted.append(met["promoted"])
+            demoted.append(met["demoted"])
+        stl = jax.tree.map(lambda x: x[0], state)
+        stl, rows, plans, fmet = eng.fetch_local(stl, ids, jnp.int32(i))
+        g = {k: v * 0.5 for k, v in rows.items()}
+        stl = eng.update_local(stl, plans, g, SOPT, jnp.int32(i))
+        jax.block_until_ready(stl[gkey]["blocks"].emb)
+        state = jax.tree.map(lambda S, L: S.at[0].set(L), state, stl)
+        row_overflow += int(fmet[f"{gkey}/idmap_row_overflow"])
+        if tiered:
+            state, _ = eng.storage_admit(state, i)
+    dt = time.perf_counter() - t0
+    out = {
+        "steps_per_s": STEPS / dt,
+        "row_overflow": row_overflow,
+    }
+    if tiered:
+        s = eng.storage
+        out.update(
+            hit_rate=float(np.mean(hit_rates[STEPS // 3:])),  # warm phase
+            promoted_per_step=float(np.mean(promoted)),
+            demoted_per_step=float(np.mean(demoted)),
+            device_rows=s.device_resident(),
+            host_rows=s.host_rows(),
+        )
+    return out
+
+
+def run() -> dict:
+    print("=" * 88)
+    print("Table 3 — tiered embedding storage: hit-rate / throughput "
+          "(device capacity × policy)")
+    print("=" * 88)
+    base = _run(_engine(2 * VOCAB, None), tiered=False)
+    live = VOCAB
+    print(f"all-HBM baseline: {base['steps_per_s']:7.2f} steps/s "
+          f"(live set ≈ {live} rows)")
+    results = {"baseline": base, "live_rows": live, "sweep": []}
+    hdr = (f"{'capacity':>9s} {'policy':>8s} {'hit%':>6s} {'steps/s':>8s} "
+           f"{'vs HBM':>7s} {'promo/st':>9s} {'demo/st':>8s} {'host_rows':>9s}")
+    print(hdr)
+    for frac in CAPACITY_FRACTIONS:
+        rows = max(int(live * frac), 1 << 7)
+        for policy in POLICIES:
+            eng = _engine(rows, StorageConfig(policy=policy))
+            r = _run(eng, tiered=True)
+            r.update(capacity_rows=rows, capacity_fraction=frac, policy=policy)
+            results["sweep"].append(r)
+            print(f"{rows:9d} {policy:>8s} {100 * r['hit_rate']:6.1f} "
+                  f"{r['steps_per_s']:8.2f} "
+                  f"{r['steps_per_s'] / base['steps_per_s']:5.2f}x "
+                  f"{r['promoted_per_step']:9.1f} {r['demoted_per_step']:8.1f} "
+                  f"{r['host_rows']:9d}")
+    out_path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_storage.json"
+    out_path.write_text(json.dumps(results, indent=2))
+    print(f"wrote {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -25,9 +25,9 @@ OPTS = CellOptions(remat=False, zero1=False)
 
 
 def mesh1():
-    devs = np.array(jax.devices())
-    return jax.make_mesh((devs.size,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,), devices=devs)
+    from repro.launch.mesh import make_test_mesh
+
+    return make_test_mesh()
 
 
 def main():

@@ -38,8 +38,16 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
 
 
 def save(tree: Any, directory: str | pathlib.Path, step: int, n_shards: int = 4,
-         max_workers: int = 4, keep_last: int | None = 3) -> pathlib.Path:
-    """Sharded parallel save with atomic commit. Returns the commit dir."""
+         max_workers: int = 4, keep_last: int | None = 3,
+         extra_tensors: dict[str, np.ndarray] | None = None) -> pathlib.Path:
+    """Sharded parallel save with atomic commit. Returns the commit dir.
+
+    ``extra_tensors`` is an optional flat {name: array} payload written as
+    its own ``extra.safetensors`` inside the SAME atomic commit. Unlike the
+    main tree it is restored from its self-describing shapes (no ``like``
+    template), which is what dynamically-sized state — the tiered store's
+    host arena + frequency counts — needs across checkpoints.
+    """
     directory = pathlib.Path(directory)
     final = directory / f"step_{step:010d}"
     tmp = directory / f".tmp_step_{step:010d}_{time.time_ns()}"
@@ -70,6 +78,9 @@ def save(tree: Any, directory: str | pathlib.Path, step: int, n_shards: int = 4,
 
     with cf.ThreadPoolExecutor(max_workers=max_workers) as ex:
         list(ex.map(write_shard, range(n_shards)))
+    if extra_tensors:
+        st.save_file({k: np.asarray(v) for k, v in extra_tensors.items()},
+                     tmp / "extra.safetensors", metadata={"step": str(step)})
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
@@ -95,13 +106,16 @@ class AsyncSaver:
         self.keep_last = keep_last
         self._thread: threading.Thread | None = None
 
-    def save(self, tree, step: int):
+    def save(self, tree, step: int,
+             extra_tensors: dict[str, np.ndarray] | None = None):
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async write
+        if extra_tensors:  # snapshot too: the host tier keeps mutating
+            extra_tensors = {k: np.array(v) for k, v in extra_tensors.items()}
 
         def run():
             save(host_tree, self.directory, step, self.n_shards,
-                 keep_last=self.keep_last)
+                 keep_last=self.keep_last, extra_tensors=extra_tensors)
 
         self._thread = threading.Thread(target=run, daemon=True)
         self._thread.start()
@@ -115,6 +129,19 @@ class AsyncSaver:
 def latest_step(directory: str | pathlib.Path) -> int | None:
     steps = sorted(pathlib.Path(directory).glob("step_*"))
     return int(steps[-1].name.split("_")[1]) if steps else None
+
+
+def restore_extra(directory: str | pathlib.Path,
+                  step: int | None = None) -> dict[str, np.ndarray] | None:
+    """Load a checkpoint's ``extra.safetensors`` payload (self-describing
+    shapes, no template). Returns None when the checkpoint has none."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None
+    path = directory / f"step_{step:010d}" / "extra.safetensors"
+    return st.load_file(path) if path.exists() else None
 
 
 def restore(directory: str | pathlib.Path, like: Any, step: int | None = None) -> Any:

@@ -1,0 +1,24 @@
+"""Version-compat shims over the jax API surface this repo uses.
+
+The codebase targets current jax (``jax.shard_map``, ``check_vma``,
+``jax.sharding.AxisType``) but must also run on the 0.4.x line where
+``shard_map`` still lives in ``jax.experimental`` and the replication
+check is spelled ``check_rep``. Every call site imports from here instead
+of special-casing versions locally.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:  # jax < 0.5: experimental home, check_rep spelling
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

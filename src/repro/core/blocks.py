@@ -13,6 +13,7 @@ keys through the training step.
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +76,28 @@ def init_rows(
 def gather(b: Blocks, offsets: jax.Array) -> jax.Array:
     """Fetch rows (the paper's `gather`; Pallas fast path in kernels/)."""
     return b.emb[offsets]
+
+
+def gather_with_slots(b: Blocks, offsets: jax.Array) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Fetch embedding rows together with their optimizer slot rows — the
+    demotion read (device → host spill must carry Adam moments so a later
+    promotion resumes training bitwise-identically)."""
+    return b.emb[offsets], {k: v[offsets] for k, v in b.slots.items()}
+
+
+def write_rows(
+    b: Blocks,
+    offsets: jax.Array,
+    emb: jax.Array,
+    slots: Mapping[str, jax.Array],
+    mask: jax.Array,
+) -> Blocks:
+    """Write full rows (embedding + slots) at ``offsets`` where ``mask`` —
+    the promotion write (host → device fill)."""
+    dst = jnp.where(mask, offsets, b.n_rows)  # out-of-range → dropped
+    new_emb = b.emb.at[dst].set(emb, mode="drop")
+    new_slots = {k: v.at[dst].set(slots[k], mode="drop") for k, v in b.slots.items()}
+    return Blocks(emb=new_emb, slots=new_slots)
 
 
 def clear_rows(b: Blocks, offsets: jax.Array, mask: jax.Array) -> Blocks:

@@ -35,6 +35,7 @@ from repro.core import idmap as idmap_lib
 from repro.core.feature_engine import FeatureSpec, hash_combine, splitmix64
 from repro.io.ragged import Ragged
 from repro.optim.sparse_adam import SparseAdamConfig, apply_row_updates
+from repro.storage.tiered import StorageConfig, TieredEmbeddingStore
 
 PAD = jnp.int64(-1)
 
@@ -73,6 +74,10 @@ class EngineConfig:
     recv_budget: int = 8192
     # per-dim overrides: dim -> dict of the five knobs above
     overrides: Mapping[int, Mapping[str, int]] = dataclasses.field(default_factory=dict)
+    # tiered storage: non-None turns the device tier into an HBM cache over
+    # a host-DRAM backing store (DESIGN.md §3); rows_per_shard then bounds
+    # HOT rows only, not live rows.
+    storage: StorageConfig | None = None
 
 
 class EmbeddingEngine:
@@ -103,6 +108,12 @@ class EmbeddingEngine:
         self.salts = {
             s.name: jnp.int64(_stable_salt(s.table_key())) for s in emb_specs
         }
+        self.storage: TieredEmbeddingStore | None = None
+        if cfg.storage is not None:
+            self.storage = TieredEmbeddingStore(
+                {k: (g.dim, g.rows_per_shard) for k, g in self.groups.items()},
+                cfg.n_devices, cfg.storage,
+            )
 
     # ------------------------------------------------------------------ state
     def init_state(self) -> dict:
@@ -166,6 +177,9 @@ class EmbeddingEngine:
             plans[key] = plan
             for mk, mv in met.items():
                 metrics[f"{key}/{mk}"] = mv
+            # device-tier occupancy: the capacity-pressure signal the tiered
+            # store's spill/fill passes act on (DESIGN.md §3)
+            metrics[f"{key}/dev_rows_live"] = m.n_live()
         return new_state, rows_r, plans, metrics
 
     # ------------------------------------------ activations (local, differentiable)
@@ -217,7 +231,11 @@ class EmbeddingEngine:
     def export_rows(self, state) -> dict:
         """Global stacked state [D, ...] → {group: (ids, emb, slots, last_use)}
         of all LIVE rows, host-side numpy. The checkpoint-portable form: no
-        device-count or slot-layout dependence (DESIGN.md §8 elasticity)."""
+        device-count or slot-layout dependence (DESIGN.md §8 elasticity).
+
+        With a tiered store the export is the UNION of both tiers — host-
+        resident rows are appended and per-id access counts ride along, so
+        elastic N→M restore is tier-transparent (DESIGN.md §3)."""
         out = {}
         for key, g in self.groups.items():
             m = jax.tree.map(np.asarray, state[key]["idmap"])
@@ -225,25 +243,42 @@ class EmbeddingEngine:
             ids, emb, slots, last = [], [], {k: [] for k in b.slots}, []
             D = m.keys.shape[0]
             for d in range(D):
-                occ = m.occupied[d]
+                occ = m.occupied[d] & (m.offsets[d] != idmap_lib.OVERFLOW_ROW)
                 ids.append(m.keys[d][occ])
                 offs = m.offsets[d][occ]
                 emb.append(b.emb[d][offs])
                 for sk in b.slots:
                     slots[sk].append(b.slots[sk][d][offs])
                 last.append(m.last_use[d][occ])
+            if self.storage is not None:
+                h = self.storage.host[key].export()
+                ids.append(h["ids"])
+                emb.append(h["emb"])
+                for sk in b.slots:
+                    slots[sk].append(h["slots"][sk])
+                last.append(h["last_use"])
             out[key] = {
                 "ids": np.concatenate(ids) if ids else np.zeros(0, np.int64),
                 "emb": np.concatenate(emb),
                 "slots": {k: np.concatenate(v) for k, v in slots.items()},
                 "last_use": np.concatenate(last),
             }
+            if self.storage is not None:
+                cnt = self.storage.counts[key]
+                out[key]["counts"] = np.fromiter(
+                    (cnt.get(int(i), 1) for i in out[key]["ids"]),
+                    np.int64, out[key]["ids"].size)
         return out
 
     def import_rows(self, rows: Mapping[str, Mapping]) -> dict:
         """Rebuild stacked state for THIS engine's device count from exported
         rows — the N→M elastic restore path. Rows are re-hash-sharded by the
-        same owner function the exchange uses, then re-inserted per shard."""
+        same owner function the exchange uses, then re-inserted per shard.
+
+        With a tiered store, each shard's hottest rows (by exported
+        last_use) fill the device tier up to capacity and the remainder
+        lands in the host tier — a checkpoint taken at one device count and
+        tier split restores onto any other (tier-transparent elasticity)."""
         from repro.core.exchange import _owner_of
 
         state = self.init_state()
@@ -253,21 +288,38 @@ class EmbeddingEngine:
                 continue  # this engine has dims the checkpoint lacks
             data = rows[key]
             ids = np.asarray(data["ids"])
+            if self.storage is not None:
+                self.storage.host[key].clear()
+                counts = np.asarray(
+                    data.get("counts", np.ones(ids.shape, np.int64)))
+                self.storage.counts[key] = {
+                    int(i): int(c) for i, c in zip(ids, counts)}
             if ids.size == 0:
                 continue
             owner = np.asarray(_owner_of(jnp.asarray(ids), D))
+            cap = g.rows_per_shard - 1  # row 0 reserved
             maps, blks = [], []
             for d in range(D):
-                sel = owner == d
+                sel = np.flatnonzero(owner == d)
                 m = jax.tree.map(lambda x: x[d], state[key]["idmap"])
                 b = jax.tree.map(lambda x: x[d], state[key]["blocks"])
-                if sel.any():
+                if self.storage is not None and sel.size > cap:
+                    # hottest rows stay device-resident; the tail spills
+                    last = np.asarray(data["last_use"])[sel]
+                    hot = sel[np.lexsort((ids[sel], -last))]
+                    sel, cold = hot[:cap], hot[cap:]
+                    self.storage.host[key].put(
+                        ids[cold], np.asarray(data["emb"])[cold],
+                        {k: np.asarray(v)[cold]
+                         for k, v in data["slots"].items()},
+                        np.asarray(data["last_use"])[cold])
+                if sel.size:
                     sid = jnp.asarray(ids[sel])
                     m, offs, is_new, _ = idmap_lib.lookup_or_insert(
-                        m, sid, jnp.asarray(np.max(data["last_use"][sel])))
+                        m, sid, jnp.asarray(np.max(np.asarray(data["last_use"])[sel])))
                     dst = jnp.where(is_new, offs, b.emb.shape[0])
-                    emb = b.emb.at[dst].set(jnp.asarray(data["emb"][sel]), mode="drop")
-                    slots = {k: v.at[dst].set(jnp.asarray(data["slots"][k][sel]),
+                    emb = b.emb.at[dst].set(jnp.asarray(np.asarray(data["emb"])[sel]), mode="drop")
+                    slots = {k: v.at[dst].set(jnp.asarray(np.asarray(data["slots"][k])[sel]),
                                               mode="drop")
                              for k, v in b.slots.items()}
                     b = blocks_lib.Blocks(emb=emb, slots=slots)
@@ -277,15 +329,63 @@ class EmbeddingEngine:
                 "idmap": jax.tree.map(lambda *xs: jnp.stack(xs), *maps),
                 "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blks),
             }
+        if self.storage is not None:
+            self.storage.sync_from_state(state)
         return state
 
     # ------------------------------------------------------------------ evict
     def evict_local(self, state_local: dict, older_than: jax.Array) -> tuple[dict, dict]:
+        """In-jit staleness discard (single shard). With a tiered store
+        configured, prefer ``evict_to_host`` at a step edge — it SPILLS the
+        stale rows to the host tier instead of discarding them."""
         new_state, metrics = {}, {}
         for key in self.groups:
             m, n = idmap_lib.evict(state_local[key]["idmap"], older_than)
             new_state[key] = {"idmap": m, "blocks": state_local[key]["blocks"]}
             metrics[f"{key}/evicted"] = n
+        return new_state, metrics
+
+    # ------------------------------------------- tiered storage (step edges)
+    # The host tier is numpy-backed, so host↔device row traffic runs at step
+    # EDGES on the stacked global-view state (DESIGN.md §3): prefetch fills
+    # before fetch_local's in-jit lookup, admit/evict spill after update.
+    def storage_prefetch(
+        self, state: dict, ids_by_feature: Mapping[str, Ragged], step
+    ) -> tuple[dict, dict]:
+        """Fill pass: promote this step's host-resident rows into HBM (and
+        demote policy-chosen victims under capacity pressure) so the jitted
+        step hits no overflow fallbacks. Returns (state', metrics)."""
+        assert self.storage is not None, "EngineConfig.storage not set"
+        eng = {k: np.asarray(v)
+               for k, v in self.engine_ids(ids_by_feature).items()}
+        return self.storage.prefetch(state, eng, int(step))
+
+    def storage_admit(self, state: dict, step) -> tuple[dict, dict]:
+        """Spill pass: demote rows that entered HBM this step but fail the
+        admission policy (e.g. below ``min_count_to_admit``)."""
+        assert self.storage is not None, "EngineConfig.storage not set"
+        return self.storage.post_step(state, int(step))
+
+    def evict_to_host(self, state: dict, older_than) -> tuple[dict, dict]:
+        """Staleness pass over the stacked state. Tiered engines spill the
+        stale rows device→host (state is preserved); plain engines discard
+        them exactly like ``evict_local``."""
+        if self.storage is not None:
+            return self.storage.evict_stale(state, int(older_than))
+        D = self.cfg.n_devices
+        new_state, metrics = {}, {}
+        for key in self.groups:
+            maps, n_total = [], 0
+            for d in range(D):
+                m = jax.tree.map(lambda x: x[d], state[key]["idmap"])
+                m, n = idmap_lib.evict(m, jnp.int32(older_than))
+                maps.append(m)
+                n_total += int(n)
+            new_state[key] = {
+                "idmap": jax.tree.map(lambda *xs: jnp.stack(xs), *maps),
+                "blocks": state[key]["blocks"],
+            }
+            metrics[f"{key}/evicted"] = n_total
         return new_state, metrics
 
 

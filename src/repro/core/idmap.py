@@ -88,20 +88,31 @@ def _home(ids: jax.Array, capacity: int) -> jax.Array:
     return (splitmix64(ids) % jnp.uint64(capacity)).astype(jnp.int32)
 
 
-def lookup(m: IDMap, ids: jax.Array) -> jax.Array:
-    """Probe-only. Returns row offsets; missing/pad ids → OVERFLOW_ROW."""
-    cap = m.capacity
-    home = _home(ids, cap)
+def _probe_find(keys: jax.Array, occupied: jax.Array, ids: jax.Array,
+                home: jax.Array, max_probes: int) -> jax.Array:
+    """Slot of each id along its full probe chain, -1 when absent.
+
+    Probes ALL ``max_probes`` rounds with no early-out on empty slots, so
+    deletions (evict / remove) need no tombstones: a cleared slot mid-chain
+    cannot hide a key stored further along.
+    """
+    cap = keys.shape[0]
     active = ids != PAD
     found = jnp.full(ids.shape, -1, jnp.int32)
 
     def body(r, found):
         slot = (home + r) % cap
         need = active & (found < 0)
-        hit = need & m.occupied[slot] & (m.keys[slot] == ids)
+        hit = need & occupied[slot] & (keys[slot] == ids)
         return jnp.where(hit, slot, found)
 
-    found = jax.lax.fori_loop(0, m.max_probes, body, found)
+    return jax.lax.fori_loop(0, max_probes, body, found)
+
+
+def lookup(m: IDMap, ids: jax.Array) -> jax.Array:
+    """Probe-only. Returns row offsets; missing/pad ids → OVERFLOW_ROW."""
+    found = _probe_find(m.keys, m.occupied, ids, _home(ids, m.capacity),
+                        m.max_probes)
     return jnp.where(found >= 0, m.offsets[jnp.maximum(found, 0)], OVERFLOW_ROW)
 
 
@@ -120,18 +131,21 @@ def lookup_or_insert(
     home = _home(ids, cap)
     active = ids != PAD
     rank = jnp.arange(n, dtype=jnp.int32)
-    found = jnp.full((n,), -1, jnp.int32)
-    is_new = jnp.zeros((n,), jnp.bool_)
+
+    # Pass 1 — find existing keys along the FULL probe chain. This must
+    # complete before any empty slot is claimed: after evict/remove cleared
+    # a mid-chain slot, claiming it eagerly would duplicate a key that still
+    # lives further along (and re-init its row).
+    found = _probe_find(m.keys, m.occupied, ids, home, m.max_probes)
+
+    # Pass 2 — only genuinely-missing ids claim empty slots, via scatter-min
+    # of batch rank per round (parallel-safe; no atomics on TPU).
+    inserting = active & (found < 0)
 
     def body(r, carry):
-        keys, occ, found, is_new = carry
+        keys, occ, found = carry
         slot = (home + r) % cap
-        need = active & (found < 0)
-        k = keys[slot]
-        hit = need & occ[slot] & (k == ids)
-        found = jnp.where(hit, slot, found)
-        # claim empty slots via scatter-min of batch rank (parallel-safe)
-        want = need & ~hit & ~occ[slot]
+        want = inserting & (found < 0) & ~occ[slot]
         claims = jnp.full((cap,), n, jnp.int32).at[slot].min(
             jnp.where(want, rank, n), mode="drop"
         )
@@ -140,12 +154,12 @@ def lookup_or_insert(
         keys = keys.at[wslot].set(ids, mode="drop")
         occ = occ.at[wslot].set(True, mode="drop")
         found = jnp.where(won, slot, found)
-        is_new = is_new | won
-        return keys, occ, found, is_new
+        return keys, occ, found
 
-    keys, occ, found, is_new = jax.lax.fori_loop(
-        0, m.max_probes, body, (m.keys, m.occupied, found, is_new)
+    keys, occ, found = jax.lax.fori_loop(
+        0, m.max_probes, body, (m.keys, m.occupied, found)
     )
+    is_new = inserting & (found >= 0)
 
     # ---- allocate rows for the winners: recycled offsets first, then bump
     new_rank = jnp.cumsum(is_new.astype(jnp.int32)) - 1
@@ -179,6 +193,47 @@ def lookup_or_insert(
         n_rows=m.n_rows, max_probes=m.max_probes,
     )
     return new_m, out_off, is_new & row_ok, metrics
+
+
+def remove(m: IDMap, ids: jax.Array) -> tuple[IDMap, jax.Array, jax.Array]:
+    """Remove specific ids; their rows are recycled via the free stack.
+
+    The demotion primitive of the tiered store (DESIGN.md §4): the caller
+    gathers the rows at the returned offsets BEFORE dropping its reference
+    to the old Blocks, then spills them to the host tier. Probe-chain safety
+    relies on ``_probe_find`` scanning all ``max_probes`` rounds, so no
+    tombstone is needed. Returns (new_map, offsets, found_mask); offsets of
+    missing/pad ids are OVERFLOW_ROW.
+
+    ids MUST be unique up to PAD padding (same contract as insert).
+    """
+    cap = m.capacity
+    found = _probe_find(m.keys, m.occupied, ids, _home(ids, cap), m.max_probes)
+    found_mask = found >= 0
+    offs = m.offsets[jnp.maximum(found, 0)]
+    occupied = m.occupied.at[jnp.where(found_mask, found, cap)].set(
+        False, mode="drop"
+    )
+    # Push freed row offsets onto the free stack for reuse. Ids whose row
+    # allocation failed at insert time sit on OVERFLOW_ROW — their slot is
+    # cleared but row 0 (reserved) must never enter the free stack.
+    freeable = found_mask & (offs != OVERFLOW_ROW)
+    pos = jnp.cumsum(freeable.astype(jnp.int32)) - 1
+    n_freed = freeable.sum(dtype=jnp.int32)
+    dst = jnp.where(freeable, m.free_size + pos, cap)
+    free_stack = m.free_stack.at[dst].set(offs, mode="drop")
+    new_m = IDMap(
+        keys=m.keys,
+        occupied=occupied,
+        offsets=m.offsets,
+        last_use=m.last_use,
+        free_stack=free_stack,
+        free_size=jnp.minimum(m.free_size + n_freed, cap),
+        next_row=m.next_row,
+        n_rows=m.n_rows,
+        max_probes=m.max_probes,
+    )
+    return new_m, jnp.where(freeable, offs, OVERFLOW_ROW), freeable
 
 
 def evict(m: IDMap, older_than: jax.Array) -> tuple[IDMap, jax.Array]:

@@ -137,6 +137,8 @@ def structural(traffic: OpTraffic, fn: Callable, *args) -> MBUResult:
     """
     lowered = jax.jit(fn).lower(*args)
     cost = lowered.compile().cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax < 0.5 returns one dict/device
+        cost = cost[0] if cost else {}
     moved = int(cost.get("bytes accessed", 0)) or None
     bi = traffic.essential_bytes / moved if moved else None
     wall = (moved or traffic.essential_bytes) / PEAK_HBM_BW

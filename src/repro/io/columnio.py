@@ -34,13 +34,51 @@ import threading
 from typing import Iterator, Mapping, Sequence
 
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib blocks
+    zstandard = None
+import zlib
 
 import jax.numpy as jnp
 
 from repro.io.ragged import Ragged
 
 MAGIC = b"RECISCOL"
+
+
+class _ZlibCompressor:
+    """Drop-in block codec when ``zstandard`` is absent. The header records
+    the codec so files are never decoded with the wrong one."""
+
+    def __init__(self, level: int = 3):
+        self.level = level
+
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, self.level)
+
+
+class _ZlibDecompressor:
+    def decompress(self, data: bytes, max_output_size: int = 0) -> bytes:
+        out = zlib.decompress(data)
+        assert not max_output_size or len(out) <= max_output_size
+        return out
+
+
+def _make_compressor(level: int):
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level), "zstd"
+    return _ZlibCompressor(level), "zlib"
+
+
+def _make_decompressor(codec: str):
+    if codec == "zstd":
+        assert zstandard is not None, (
+            "file is zstd-compressed but the zstandard module is missing")
+        return zstandard.ZstdDecompressor()
+    assert codec == "zlib", f"unknown ColumnIO codec {codec!r}"
+    return _ZlibDecompressor()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +93,7 @@ class ColumnWriter:
                  level: int = 3):
         self.path = pathlib.Path(path)
         self.schema = list(schema)
-        self._cctx = zstandard.ZstdCompressor(level=level)
+        self._cctx, self._codec = _make_compressor(level)
         self._groups: list[dict] = []
         self._blobs: list[bytes] = []
 
@@ -94,6 +132,7 @@ class ColumnWriter:
         header = json.dumps({
             "schema": [dataclasses.asdict(c) for c in self.schema],
             "groups": self._groups,
+            "codec": self._codec,
         }).encode()
         with open(self.path, "wb") as f:
             f.write(MAGIC)
@@ -114,12 +153,12 @@ class ColumnReader:
 
     def __init__(self, path: str | pathlib.Path, columns: Sequence[str] | None = None):
         self.path = pathlib.Path(path)
-        self._dctx = zstandard.ZstdDecompressor()
         with open(self.path, "rb") as f:
             assert f.read(8) == MAGIC, f"not a ColumnIO file: {path}"
             hlen = int(np.frombuffer(f.read(4), np.uint32)[0])
             self.header = json.loads(f.read(hlen))
             self._data_start = 12 + hlen
+        self._dctx = _make_decompressor(self.header.get("codec", "zstd"))
         self.schema = {c["name"]: ColumnSchema(**c) for c in self.header["schema"]}
         self.columns = list(columns) if columns is not None else list(self.schema)
 

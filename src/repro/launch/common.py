@@ -38,6 +38,13 @@ class CellOptions:
     sp_residual: bool = False          # manual SP layer (ag/rs boundaries)
     fused_ce: bool = False             # chunked/fused softmax-CE
     compress_grads: bool = False       # int8+EF DP grad compression (recsys)
+    # tiered embedding storage (repro.storage.StorageConfig); non-None turns
+    # the device tier into an HBM cache over a host-DRAM backing store and
+    # makes the cell expose step-edge hooks for the Trainer (DESIGN.md §3)
+    storage: Any | None = None
+    # device-tier rows per shard override when storage is on (the HBM cache
+    # size); None keeps the arch-derived all-HBM sizing
+    storage_device_rows: int | None = None
 
 
 @dataclasses.dataclass

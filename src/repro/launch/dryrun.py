@@ -40,6 +40,8 @@ def _cost_of(compiled) -> dict:
             if v is not None:
                 mem_d[k] = int(v)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax < 0.5 returns one dict/device
+        cost = cost[0] if cost else {}
     cost_d = {k: float(v) for k, v in cost.items()
               if isinstance(v, (int, float)) and k in
               ("flops", "bytes accessed", "transcendentals", "utilization")}

@@ -21,6 +21,7 @@ from repro.models import gnn
 from repro.models.gnn import GraphBatch
 from repro.models.layers import MIXED
 from repro.optim import adamw
+from repro.compat import shard_map
 
 
 def _graph_specs(mesh, spec_map: dict) -> GraphBatch:
@@ -56,7 +57,7 @@ def _full_graph_cell(arch, shape, mesh, cfg, acfg, opts: CellOptions):
         return gnn.loss_fn(params, cfg, g, MIXED, psum_axes=axes,
                            use_pallas=opts.use_pallas)
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         loss_local, mesh=mesh,
         in_specs=(P(), GraphBatch(
             feats=P(None, None), edge_src=P(axes), edge_dst=P(axes),
@@ -139,7 +140,7 @@ def _dp_cell(arch, shape, mesh, cfg, acfg, opts: CellOptions):
         l = gnn.loss_fn(params, cfg, g, MIXED, psum_axes=None, use_pallas=opts.use_pallas)
         return jax.lax.pmean(l, shard_axes)
 
-    smapped = jax.shard_map(loss_local, mesh=mesh, in_specs=(P(), gspec),
+    smapped = shard_map(loss_local, mesh=mesh, in_specs=(P(), gspec),
                             out_specs=P(), check_vma=False)
 
     n_sh = n_shards
@@ -174,7 +175,7 @@ def _dp_cell(arch, shape, mesh, cfg, acfg, opts: CellOptions):
         state_spec["ef"] = jax.tree.map(
             lambda s: P(*((shard_axes,) + tuple(s))), dspec,
             is_leaf=lambda x: isinstance(x, P))
-        gmapped = jax.shard_map(
+        gmapped = shard_map(
             grad_local, mesh=mesh,
             in_specs=(P(), gspec, jax.tree.map(
                 lambda s: P(*((shard_axes,) + tuple(s))), dspec,

@@ -26,6 +26,7 @@ from repro.models.layers import MIXED
 from repro.models.transformer import MeshCtx
 from repro.optim import adamw
 from repro.optim.sparse_adam import SparseAdamConfig
+from repro.compat import shard_map
 
 
 def _engine_for(cfg, mesh, L_local: int, opts: CellOptions) -> tuple[EmbeddingEngine, str]:
@@ -61,7 +62,7 @@ def _fetch_sm(engine: EmbeddingEngine, gkey: str, mesh, axes, ids_spec, L_local,
         met = jax.lax.psum(met, axes)
         return (jax.tree.map(lambda x: x[None], st), rows_r[gkey], plans[gkey], met)
 
-    return jax.shard_map(
+    return shard_map(
         fetch_fn, mesh=mesh,
         in_specs=(sp, ids_spec, P()),
         out_specs=(sp, sp, sp, P()),
@@ -76,7 +77,7 @@ def _route_sm(engine, gkey, mesh, axes, out_spec, L_local, b_loc, t_loc):
         vals = exchange.route_rows(rows_r, plan, espec)         # (L, d) fp32
         return vals.reshape(b_loc, t_loc, vals.shape[-1])
 
-    return jax.shard_map(
+    return shard_map(
         route_fn, mesh=mesh, in_specs=(P(axes), P(axes)), out_specs=out_spec,
         check_vma=False,
     )
@@ -90,7 +91,7 @@ def _update_sm(engine, gkey, mesh, axes, opt: SparseAdamConfig):
         st = engine.update_local(st, {gkey: plan}, {gkey: grows}, opt, step)
         return jax.tree.map(lambda x: x[None], st)
 
-    return jax.shard_map(
+    return shard_map(
         upd_fn, mesh=mesh, in_specs=(sp, sp, sp, P()), out_specs=sp,
         check_vma=False,
     )

@@ -15,6 +15,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_test_mesh(shape=None, axes: tuple[str, ...] = ("data",), devices=None):
+    """Version-compat mesh builder for tests.
+
+    jax < 0.5 has no ``jax.sharding.AxisType`` and ``jax.make_mesh`` rejects
+    the ``axis_types`` kwarg; newer jax wants explicit Auto axes for the
+    shard_map/GSPMD mix the cells use. Pass ``axis_types`` only when the
+    running jax supports it so the same test code spans both.
+    """
+    import numpy as np
+
+    devs = np.array(jax.devices()) if devices is None else np.asarray(devices)
+    if shape is None:
+        shape = (devs.size,)
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, devices=devs, **kwargs)
+
+
 def make_debug_mesh(n_devices: int | None = None):
     """Small host mesh for multi-device tests (forced host devices)."""
     n = n_devices or len(jax.devices())

@@ -26,6 +26,7 @@ from repro.launch.common import Cell, CellOptions, abstractify, mesh_info, round
 from repro.models.layers import MIXED
 from repro.optim import adamw
 from repro.optim.sparse_adam import SparseAdamConfig
+from repro.compat import shard_map
 
 _MODELS = {}
 
@@ -145,10 +146,15 @@ def _plumbing(arch: ArchConfig, mesh, b_loc: int, specs: list[FeatureSpec],
         c = max(8, round_up(int(np.ceil(u / D * opts.capacity_slack)), 8))
         r = min(D * c, max(round_up(int(opts.recv_slack * u), 8), 64))
         rows = max(round_up(int(rows_global.get(dim, 1 << 20) * 1.5 / D), 128), 1024)
+        if opts.storage is not None and opts.storage_device_rows is not None:
+            # tiered mode: rows_per_shard is the HBM hot-row cache size, not
+            # the live-row ceiling — the host tier absorbs the rest
+            rows = opts.storage_device_rows
         overrides[dim] = dict(u_budget=u, per_dest_cap=c, recv_budget=r,
                               rows_per_shard=rows, map_capacity_per_shard=2 * rows)
     eng = EmbeddingEngine(specs, EngineConfig(
-        mesh_axes=mi["axes"], n_devices=D, overrides=overrides))
+        mesh_axes=mi["axes"], n_devices=D, overrides=overrides,
+        storage=opts.storage))
     fe = FeatureEngine(specs, use_pallas=opts.use_pallas)
     nnz = {s.name: b_loc * _ids_per_row(s) for s in specs}
     return _Plumbing(engine=eng, fengine=fe, specs=specs, nnz_loc=nnz,
@@ -194,7 +200,7 @@ def build(arch: ArchConfig, shape: ShapeCell, mesh, opts: CellOptions = CellOpti
         return (jax.tree.map(lambda x: x[None], st),
                 tuple(rows_r[k] for k in gkeys), tuple(plans[k] for k in gkeys), met)
 
-    fetch = jax.shard_map(fetch_fn, mesh=mesh, in_specs=(sp, sp, P()),
+    fetch = shard_map(fetch_fn, mesh=mesh, in_specs=(sp, sp, P()),
                           out_specs=(sp, sp, sp, P()), check_vma=False)
 
     def route_fn(rows_r, plans, batch):
@@ -203,7 +209,7 @@ def build(arch: ArchConfig, shape: ShapeCell, mesh, opts: CellOptions = CellOpti
                                      ids, use_pallas=opts.use_pallas)
         return acts
 
-    route = jax.shard_map(route_fn, mesh=mesh, in_specs=(sp, sp, sp),
+    route = shard_map(route_fn, mesh=mesh, in_specs=(sp, sp, sp),
                           out_specs=_acts_specs(pl), check_vma=False)
 
     def dense_fn(batch):
@@ -224,7 +230,7 @@ def build(arch: ArchConfig, shape: ShapeCell, mesh, opts: CellOptions = CellOpti
                                     dict(zip(gkeys, grows)), sopt, step)
         return jax.tree.map(lambda x: x[None], st)
 
-    update = jax.shard_map(update_fn, mesh=mesh, in_specs=(sp, sp, sp, P()),
+    update = shard_map(update_fn, mesh=mesh, in_specs=(sp, sp, sp, P()),
                            out_specs=sp, check_vma=False)
 
     def init_fn():
@@ -271,6 +277,14 @@ def build(arch: ArchConfig, shape: ShapeCell, mesh, opts: CellOptions = CellOpti
                 make_batch=lambda seed: pl.make_batch(seed),
                 donate_state=opts.donate_state and train, returns_state=train)
     cell.engine = pl.engine  # public: checkpoint export/import, serving
+    if train and pl.engine.storage is not None:
+        from repro.storage.integration import StorageTrainerHooks
+
+        # step-edge hooks for the Trainer: host↔HBM spill/fill around the
+        # jitted step + host-tier checkpointing (pass as Trainer(hooks=...))
+        cell.storage_hooks = StorageTrainerHooks(
+            pl.engine, lambda batch: pl.prepared(_split_local(pl, batch))[0],
+            state_key="sparse")
     return cell
 
 
@@ -307,7 +321,7 @@ def _build_retrieval(arch: ArchConfig, shape: ShapeCell, mesh, opts: CellOptions
 
     acts_u_specs = {s.name: P(None) for s in user_specs if s.emb_dim is not None}
     acts_c_specs = {s.name: P(axes) for s in cand_specs}
-    fetch = jax.shard_map(fetch_fn, mesh=mesh,
+    fetch = shard_map(fetch_fn, mesh=mesh,
                           in_specs=(sp, sp, pl_u.in_spec(), pl_c.in_spec(), P()),
                           out_specs=(acts_u_specs, acts_c_specs, P()), check_vma=False)
 

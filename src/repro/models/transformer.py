@@ -27,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models import attention as attn
 from repro.models import moe as moe_lib
+from repro.compat import shard_map
 from repro.models.layers import (
     MIXED, Precision, dense_apply, dense_pspec, make_dense, make_rmsnorm,
     make_swiglu, rmsnorm_apply, swiglu_apply, swiglu_pspec,
@@ -175,7 +176,7 @@ def _ffn_block(lp: dict, cfg: TransformerConfig, h: jax.Array, ctx: MeshCtx,
         y, aux, _ = moe_lib.moe_apply_local(pp, mcfg, x_loc.reshape(-1, d), ctx.tp, ep, prec)
         return y.reshape(x_loc.shape), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(ctx.dp, ctx.tp, None), moe_lib.moe_pspec(mcfg)),
         out_specs=(P(ctx.dp, ctx.tp, None), P()),
@@ -283,7 +284,7 @@ def _layer_body_sp(lp: dict, cfg: TransformerConfig, x: jax.Array,
     }
     if cfg.qkv_bias and not kv_shard:
         pass  # attn_pspec already emits the right bias specs
-    return jax.shard_map(
+    return shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(ctx.dp or None, tp, None), wspec),
         out_specs=P(ctx.dp or None, tp, None), check_vma=False,
@@ -468,7 +469,7 @@ def decode_step(
                     pp, cfg.attn_cfg, h_loc, ck_loc, cv_loc, pos,
                     seq_axis=ctx.seq_shards, prec=prec)
 
-            a, ck, cv = jax.shard_map(
+            a, ck, cv = shard_map(
                 body, mesh=ctx.mesh,
                 in_specs=(P(ctx.dp or None, None, None), cspec, cspec, aspec_rep),
                 out_specs=(P(ctx.dp or None, None, None), cspec, cspec),

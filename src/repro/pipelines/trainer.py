@@ -116,10 +116,16 @@ class Trainer:
     """
 
     def __init__(self, cell, cfg: TrainConfig,
-                 evict_fn: Callable[[Any, int], Any] | None = None):
+                 evict_fn: Callable[[Any, int], Any] | None = None,
+                 hooks: Any | None = None):
         self.cell = cell
         self.cfg = cfg
         self.evict_fn = evict_fn
+        # Step-edge hooks (e.g. storage.StorageTrainerHooks): pre_step /
+        # post_step run OUTSIDE the jitted step — that is where the tiered
+        # embedding store moves rows host↔device (spill/fill, DESIGN.md §3)
+        # and where its state joins the checkpoint (ckpt_extra/on_restore).
+        self.hooks = hooks
         donate = (0,) if (cell.donate_state and cell.returns_state) else ()
         self._jit_step = jax.jit(cell.step_fn, donate_argnums=donate)
         self.saver = (saver_lib.AsyncSaver(cfg.ckpt_dir, cfg.n_ckpt_shards,
@@ -134,7 +140,10 @@ class Trainer:
         payload = {"state": state,
                    "cursor": {"part": 0, "group": 0, **(cursor or {})},
                    "saved_step": np.int64(step)}
-        self.saver.save(payload, step)
+        extra = (self.hooks.ckpt_extra()
+                 if self.hooks is not None and hasattr(self.hooks, "ckpt_extra")
+                 else None)
+        self.saver.save(payload, step, extra_tensors=extra)
         if blocking:
             self.saver.wait()
 
@@ -148,7 +157,11 @@ class Trainer:
         like = {"state": init_state, "cursor": {"part": 0, "group": 0},
                 "saved_step": np.int64(0)}
         restored = saver_lib.restore(self.cfg.ckpt_dir, like, step)
-        return restored["state"], int(restored["saved_step"]), restored["cursor"]
+        state = restored["state"]
+        if self.hooks is not None and hasattr(self.hooks, "on_restore"):
+            extra = saver_lib.restore_extra(self.cfg.ckpt_dir, step)
+            state = self.hooks.on_restore(state, extra)
+        return state, int(restored["saved_step"]), restored["cursor"]
 
     # -- the loop -------------------------------------------------------------
     def run(self, state, batches: Iterator, start_step: int = 0,
@@ -166,11 +179,17 @@ class Trainer:
             if step >= cfg.total_steps:
                 break
             t0 = time.perf_counter()
+            hook_metrics = {}
+            if self.hooks is not None:
+                state, hook_metrics = self.hooks.pre_step(state, batch, step + 1)
             if self.cell.returns_state:
                 state, metrics = self._jit_step(state, batch)
             else:
                 metrics = self._jit_step(state, batch)
             jax.block_until_ready(metrics)
+            if self.hooks is not None:
+                state, post_m = self.hooks.post_step(state, step + 1)
+                hook_metrics.update(post_m)
             dt = time.perf_counter() - t0
             step += 1
 
@@ -178,6 +197,7 @@ class Trainer:
             if step % cfg.log_every == 0 or slow:
                 m = {k: float(np.asarray(v)) for k, v in metrics.items()
                      if np.ndim(v) == 0}
+                m.update({k: float(v) for k, v in hook_metrics.items()})
                 m.update(step=step, wall_s=dt, straggler=bool(slow))
                 history.append(m)
 

@@ -1,0 +1,8 @@
+# Tiered embedding storage: host-DRAM backing store beneath the device
+# HBM hot-row cache, with pluggable admission/eviction (DESIGN.md §3-§4).
+from repro.storage.host_store import HostStore  # noqa: F401
+from repro.storage.integration import StorageTrainerHooks  # noqa: F401
+from repro.storage.policies import (  # noqa: F401
+    CachePolicy, FrequencyAdmissionPolicy, LFUPolicy, LRUPolicy, make_policy,
+)
+from repro.storage.tiered import StorageConfig, TieredEmbeddingStore  # noqa: F401

@@ -1,0 +1,182 @@
+"""HostStore — the host-DRAM backing tier of the embedding hierarchy.
+
+A numpy-backed append/compact row arena keyed by engine id. It holds full
+row records — embedding + every optimizer slot + last-use step — for rows
+that are live in the model but not resident in device HBM (DESIGN.md §3).
+Capacity is bounded only by host memory (orders of magnitude above HBM;
+the paper's Embedding Engine assumes exactly this multi-level hierarchy).
+
+Layout: parallel arrays ``ids / emb / slots[k] / last_use`` plus a python
+dict index id → arena row. Writes append at the arena top (amortized-
+doubling growth); removals leave holes which a threshold-triggered
+``compact()`` squeezes out, so steady-state waste is bounded by
+``compact_waste``. All reads/writes are vectorized numpy; values round-trip
+bit-exactly (fp32 in, fp32 out — demote→promote preserves training state).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class HostStore:
+    def __init__(
+        self,
+        dim: int,
+        slot_names: tuple[str, ...] = ("m", "v"),
+        init_capacity: int = 1024,
+        compact_waste: float = 0.5,
+    ):
+        self.dim = dim
+        self.slot_names = tuple(slot_names)
+        self.compact_waste = compact_waste
+        self._alloc(max(int(init_capacity), 16))
+        self.index: dict[int, int] = {}  # engine id → arena row
+        self.top = 0                     # append cursor
+        self.n_dead = 0                  # holes awaiting compaction
+
+    # ------------------------------------------------------------------ arena
+    def _alloc(self, cap: int):
+        self.ids = np.full((cap,), -1, np.int64)
+        self.emb = np.zeros((cap, self.dim), np.float32)
+        self.slots = {k: np.zeros((cap, self.dim), np.float32)
+                      for k in self.slot_names}
+        self.last_use = np.zeros((cap,), np.int32)
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def n_rows(self) -> int:
+        """Live rows (the metric surfaced as host-resident rows)."""
+        return len(self.index)
+
+    @property
+    def nbytes(self) -> int:
+        per_row = 8 + 4 + 4 * self.dim * (1 + len(self.slot_names))
+        return self.capacity * per_row
+
+    def _grow_to(self, need: int):
+        old_cap = self.capacity
+        cap = old_cap
+        while cap < need:
+            cap *= 2
+        old = (self.ids, self.emb, self.slots, self.last_use)
+        self._alloc(cap)
+        self.ids[:old_cap] = old[0]
+        self.emb[:old_cap] = old[1]
+        for k in self.slot_names:
+            self.slots[k][:old_cap] = old[2][k]
+        self.last_use[:old_cap] = old[3]
+
+    def compact(self):
+        """Squeeze out holes: live rows become contiguous [0, n_rows)."""
+        live = np.fromiter(self.index.values(), np.int64, len(self.index))
+        live.sort()  # preserve append order (stable ages)
+        n = live.size
+        self.ids[:n] = self.ids[live]
+        self.emb[:n] = self.emb[live]
+        for k in self.slot_names:
+            self.slots[k][:n] = self.slots[k][live]
+        self.last_use[:n] = self.last_use[live]
+        self.ids[n:] = -1
+        self.index = {int(i): r for r, i in enumerate(self.ids[:n])}
+        self.top = n
+        self.n_dead = 0
+
+    def _rows_for_append(self, k: int) -> None:
+        if self.top + k > self.capacity:
+            if self.n_dead >= self.compact_waste * self.capacity:
+                self.compact()
+            if self.top + k > self.capacity:
+                self._grow_to(self.top + k)
+
+    # ------------------------------------------------------------------- ops
+    def contains(self, ids: np.ndarray) -> np.ndarray:
+        idx = self.index
+        return np.fromiter((int(i) in idx for i in ids), np.bool_, len(ids))
+
+    def put(self, ids, emb, slots, last_use) -> None:
+        """Upsert full rows. Existing ids are overwritten in place; new ids
+        append at the arena top."""
+        ids = np.asarray(ids, np.int64)
+        emb = np.asarray(emb, np.float32)
+        last_use = np.broadcast_to(np.asarray(last_use, np.int32), ids.shape)
+        # Make room BEFORE resolving arena rows: compaction/growth relocates
+        # live rows, which would invalidate row indices looked up earlier.
+        n_fresh = sum(1 for i in ids.tolist() if int(i) not in self.index)
+        if n_fresh:
+            self._rows_for_append(n_fresh)
+        rows = np.empty(ids.shape, np.int64)
+        for j, i in enumerate(ids.tolist()):
+            r = self.index.get(i, -1)
+            if r < 0:
+                r = self.top
+                self.index[int(i)] = r
+                self.top += 1
+            rows[j] = r
+        self.ids[rows] = ids
+        self.emb[rows] = emb
+        for k in self.slot_names:
+            self.slots[k][rows] = np.asarray(slots[k], np.float32)
+        self.last_use[rows] = last_use
+
+    def _rows_of(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        idx = self.index
+        rows = np.fromiter((idx.get(int(i), -1) for i in ids), np.int64, len(ids))
+        return rows, rows >= 0
+
+    def get(self, ids) -> tuple[np.ndarray, np.ndarray, dict, np.ndarray]:
+        """→ (found_mask, emb, slots, last_use); missing rows are zeros."""
+        ids = np.asarray(ids, np.int64)
+        rows, found = self._rows_of(ids)
+        src = np.where(found, rows, 0)
+        emb = np.where(found[:, None], self.emb[src], 0.0)
+        slots = {k: np.where(found[:, None], self.slots[k][src], 0.0)
+                 for k in self.slot_names}
+        last = np.where(found, self.last_use[src], 0)
+        return found, emb, slots, last
+
+    def pop(self, ids) -> tuple[np.ndarray, np.ndarray, dict, np.ndarray]:
+        """get + remove — promotion is a *move* (the hierarchy is exclusive:
+        a row is resident in exactly one tier)."""
+        out = self.get(ids)
+        self.remove(ids)
+        return out
+
+    def remove(self, ids) -> int:
+        n = 0
+        for i in np.asarray(ids, np.int64).tolist():
+            r = self.index.pop(int(i), None)
+            if r is not None:
+                self.ids[r] = -1
+                self.n_dead += 1
+                n += 1
+        return n
+
+    # ----------------------------------------------------------- checkpoint
+    def export(self) -> dict[str, np.ndarray]:
+        """Checkpoint-portable live rows (same schema as engine export)."""
+        live = np.fromiter(self.index.values(), np.int64, len(self.index))
+        live.sort()
+        return {
+            "ids": self.ids[live].copy(),
+            "emb": self.emb[live].copy(),
+            "slots": {k: self.slots[k][live].copy() for k in self.slot_names},
+            "last_use": self.last_use[live].copy(),
+        }
+
+    def clear(self) -> None:
+        self.index = {}
+        self.top = 0
+        self.n_dead = 0
+        self.ids[:] = -1
+
+    def load(self, data) -> None:
+        """Replace contents from an ``export()`` payload."""
+        self.clear()
+        ids = np.asarray(data["ids"], np.int64)
+        if ids.size:
+            self.put(ids, data["emb"],
+                     {k: data["slots"][k] for k in self.slot_names},
+                     data["last_use"])

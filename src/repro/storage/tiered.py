@@ -1,0 +1,389 @@
+"""TieredEmbeddingStore — coordinator of the two-tier embedding hierarchy.
+
+Device HBM (IDMap + Blocks, hash-sharded) is a *cache* over a host-DRAM
+``HostStore`` backing tier (DESIGN.md §3). The hierarchy is exclusive: a
+row is resident in exactly one tier, and moves carry the full record
+(embedding + optimizer slots + last-use), so demote→promote round-trips
+are bitwise-lossless and training is numerically identical to an all-HBM
+run — capacity pressure becomes a cache-miss cost, not a quality cost.
+
+Because the device tier mutates inside jit/shard_map, host↔device traffic
+happens at step EDGES:
+
+  prefetch   (before the jitted step)  — classify this step's engine ids
+             per owner shard into hits / host-resident misses / fresh ids;
+             under capacity pressure demote policy-chosen victims
+             device→host; then promote ("fill") host rows device→HBM so
+             the step's ``lookup_or_insert`` finds every id resident.
+  post_step  (after the jitted step)   — admission enforcement: ids that
+             entered HBM this step but fail ``CachePolicy.admit`` (e.g.
+             below ``min_count_to_admit``) are demoted ("spill") with
+             their freshly-updated rows.
+  evict_stale                          — the staleness pass: stale rows
+             spill device→host instead of being discarded.
+
+The store keeps a host-side residency mirror (id → last-use per shard) and
+lifetime access counts per group; both are cheap to rebuild from device
+state (``sync_from_state``) and checkpointable (``checkpoint_payload``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocks as blocks_lib
+from repro.core import idmap as idmap_lib
+from repro.core.exchange import _owner_of
+from repro.storage.host_store import HostStore
+from repro.storage.policies import CachePolicy, make_policy
+
+PAD = -1
+_COUNTERS = ("lookups", "hits", "promoted", "demoted", "fresh",
+             "admission_demoted", "spilled_stale", "unplaceable")
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageConfig:
+    """EngineConfig.storage knobs (presence turns the tiered store on)."""
+
+    policy: str = "lru"          # "lru" | "lfu" | "freq:<N>[:<base>]"
+    spill_slack: int = 0         # extra victims per pressure event (hysteresis)
+    host_init_capacity: int = 1024
+    compact_waste: float = 0.5   # HostStore hole fraction that triggers compact
+
+
+def _pad_pow2(ids: np.ndarray, min_size: int = 8) -> np.ndarray:
+    """Pad an id vector with PAD to a power-of-two length so the jitted
+    per-shard idmap ops see a handful of shapes, not one per call."""
+    n = max(min_size, int(ids.size))
+    size = 1 << (n - 1).bit_length()
+    out = np.full((size,), PAD, np.int64)
+    out[: ids.size] = ids
+    return out
+
+
+def _pad_rows(x: np.ndarray, size: int) -> np.ndarray:
+    out = np.zeros((size,) + x.shape[1:], x.dtype)
+    out[: x.shape[0]] = x
+    return out
+
+
+class _ShardView:
+    """Lazy per-shard (idmap, blocks) view over stacked [D, ...] state;
+    flushes back with one ``.at[d].set`` per leaf only when dirty."""
+
+    def __init__(self, state_g: dict, d: int):
+        self.state_g = state_g
+        self.d = d
+        self.m = None
+        self.b = None
+        self.dirty = False
+
+    def get(self):
+        if self.m is None:
+            # a checkpoint-restored state carries numpy leaves; the tier-move
+            # ops below index with traced values, so coerce to jax arrays
+            self.state_g = jax.tree.map(jnp.asarray, self.state_g)
+            self.m = jax.tree.map(lambda x: x[self.d], self.state_g["idmap"])
+            self.b = jax.tree.map(lambda x: x[self.d], self.state_g["blocks"])
+        return self.m, self.b
+
+    def put(self, m, b):
+        self.m, self.b, self.dirty = m, b, True
+
+    def flush(self) -> dict:
+        if not self.dirty:
+            return self.state_g
+        d = self.d
+        return {
+            "idmap": jax.tree.map(lambda S, L: S.at[d].set(L),
+                                  self.state_g["idmap"], self.m),
+            "blocks": jax.tree.map(lambda S, L: S.at[d].set(L),
+                                   self.state_g["blocks"], self.b),
+        }
+
+
+class TieredEmbeddingStore:
+    def __init__(
+        self,
+        group_shapes: Mapping[str, tuple[int, int]],  # key -> (dim, rows_per_shard)
+        n_devices: int,
+        cfg: StorageConfig,
+        slot_names: tuple[str, ...] = ("m", "v"),
+    ):
+        self.cfg = cfg
+        self.D = n_devices
+        self.slot_names = tuple(slot_names)
+        self.policy: CachePolicy = make_policy(cfg.policy)
+        self.rows_per_shard = {g: r for g, (_, r) in group_shapes.items()}
+        self.host: dict[str, HostStore] = {
+            g: HostStore(dim, self.slot_names, cfg.host_init_capacity,
+                         cfg.compact_waste)
+            for g, (dim, _) in group_shapes.items()
+        }
+        # host-side mirrors of device residency / lifetime frequency
+        self.resident: dict[str, list[dict[int, int]]] = {
+            g: [dict() for _ in range(n_devices)] for g in group_shapes
+        }
+        self.counts: dict[str, dict[int, int]] = {g: {} for g in group_shapes}
+        self._pending: dict[str, list[list[int]]] = {
+            g: [list() for _ in range(n_devices)] for g in group_shapes
+        }
+        self.totals = {k: 0 for k in _COUNTERS}
+
+    # --------------------------------------------------------------- helpers
+    def _owner_np(self, ids: np.ndarray) -> np.ndarray:
+        if self.D == 1:
+            return np.zeros(ids.shape, np.int32)
+        return np.asarray(_owner_of(jnp.asarray(ids), self.D))
+
+    def device_resident(self, g: str | None = None) -> int:
+        keys = [g] if g else list(self.resident)
+        return sum(len(r) for k in keys for r in self.resident[k])
+
+    def host_rows(self, g: str | None = None) -> int:
+        keys = [g] if g else list(self.host)
+        return sum(self.host[k].n_rows for k in keys)
+
+    def _metrics(self, step_counts: dict, keys: tuple[str, ...]) -> dict:
+        """Fold counters into lifetime totals; report only this pass's
+        ``keys`` (so pre/post-step merges never clobber each other) plus
+        the current occupancy gauges."""
+        for k, v in step_counts.items():
+            self.totals[k] += v
+        m = {k: step_counts[k] for k in keys}
+        if "lookups" in keys:
+            m["hit_rate"] = (step_counts["hits"] / step_counts["lookups"]
+                             if step_counts["lookups"] else 1.0)
+        m["host_rows"] = self.host_rows()
+        m["device_rows"] = self.device_resident()
+        return m
+
+    # ------------------------------------------------------- tier movement
+    def _demote(self, g: str, sv: _ShardView, victim_ids: np.ndarray,
+                res: dict[int, int]):
+        """Move rows device→host (spill), preserving emb + slots."""
+        m, b = sv.get()
+        pids = _pad_pow2(victim_ids)
+        m2, offs, found = idmap_lib.remove(m, jnp.asarray(pids))
+        emb, slots = blocks_lib.gather_with_slots(b, offs)
+        b2 = blocks_lib.clear_rows(b, offs, found)
+        sv.put(m2, b2)
+        found_np = np.asarray(found)[: victim_ids.size]
+        sel = victim_ids[found_np]
+        if sel.size:
+            lu = np.fromiter((res.get(int(i), 0) for i in sel), np.int32,
+                             sel.size)
+            emb_np = np.asarray(emb)[: victim_ids.size][found_np]
+            slots_np = {k: np.asarray(v)[: victim_ids.size][found_np]
+                        for k, v in slots.items()}
+            self.host[g].put(sel, emb_np, slots_np, lu)
+        for i in victim_ids.tolist():
+            res.pop(int(i), None)
+        return int(sel.size)
+
+    def _promote(self, g: str, sv: _ShardView, ids: np.ndarray,
+                 step: int) -> np.ndarray:
+        """Move rows host→device (fill): insert ids, write full records.
+        Returns the ids that actually LANDED (probe exhaustion can reject an
+        insert); the rest stay host-resident."""
+        m, b = sv.get()
+        pids = _pad_pow2(ids)
+        m2, offs, _is_new, _ = idmap_lib.lookup_or_insert(
+            m, jnp.asarray(pids), jnp.int32(step))
+        found, emb, slots, _lu = self.host[g].get(ids)
+        offs_np = np.asarray(offs)
+        ok = np.zeros((pids.size,), np.bool_)
+        ok[: ids.size] = found & (offs_np[: ids.size] != idmap_lib.OVERFLOW_ROW)
+        b2 = blocks_lib.write_rows(
+            b, offs, jnp.asarray(_pad_rows(emb, pids.size)),
+            {k: jnp.asarray(_pad_rows(v, pids.size)) for k, v in slots.items()},
+            jnp.asarray(ok))
+        sv.put(m2, b2)
+        landed = ids[ok[: ids.size]]
+        self.host[g].remove(landed)  # exclusive hierarchy: promotion is a move
+        return landed
+
+    # ------------------------------------------------------------ step edges
+    def prefetch(self, state: dict, eng_ids: Mapping[str, np.ndarray],
+                 step: int) -> tuple[dict, dict]:
+        """The fill pass (run just before the jitted step).
+
+        ``eng_ids`` is {group: salted engine-id vector} — the same ids
+        ``fetch_local`` will see (PAD/duplicates allowed). Returns
+        (state', metrics)."""
+        met = {k: 0 for k in _COUNTERS}
+        new_state = dict(state)
+        for g, raw in eng_ids.items():
+            if g not in self.host:
+                continue
+            ids = np.unique(np.asarray(raw, np.int64))
+            ids = ids[ids != PAD]
+            if not ids.size:
+                continue
+            owner = self._owner_np(ids)
+            cap = self.rows_per_shard[g] - 1  # row 0 reserved (overflow)
+            state_g = new_state[g]
+            for d in range(self.D):
+                sids = ids[owner == d] if self.D > 1 else ids
+                if not sids.size:
+                    continue
+                res = self.resident[g][d]
+                counts = self.counts[g]
+                for i in sids.tolist():
+                    counts[i] = counts.get(i, 0) + 1
+                in_res = np.fromiter((int(i) in res for i in sids), np.bool_,
+                                     sids.size)
+                miss = sids[~in_res]
+                met["lookups"] += int(sids.size)
+                met["hits"] += int(sids.size - miss.size)
+                sv = _ShardView(state_g, d)
+                placeable = miss
+                if miss.size:
+                    free = cap - len(res)
+                    if miss.size > free:
+                        want = miss.size - free + self.cfg.spill_slack
+                        sset = set(sids.tolist())
+                        cand = np.fromiter(
+                            (i for i in res if i not in sset), np.int64,
+                        )
+                        k = min(want, cand.size)
+                        if k > 0:
+                            lu = np.fromiter((res[int(i)] for i in cand),
+                                             np.int32, cand.size)
+                            cnt = np.fromiter(
+                                (counts.get(int(i), 0) for i in cand),
+                                np.int64, cand.size)
+                            victims = self.policy.select_victims(
+                                cand, lu, cnt, k)
+                            met["demoted"] += self._demote(g, sv, victims, res)
+                        free = cap - len(res)
+                        if miss.size > free:  # every victim was protected
+                            met["unplaceable"] += int(miss.size - free)
+                            placeable = miss[:free]
+                    promo = placeable[self.host[g].contains(placeable)]
+                    met["fresh"] += int(placeable.size - promo.size)
+                    if promo.size:
+                        landed = self._promote(g, sv, promo, step)
+                        met["promoted"] += int(landed.size)
+                        stranded = np.setdiff1d(promo, landed)
+                        if stranded.size:  # probe exhaustion: stayed on host
+                            met["unplaceable"] += int(stranded.size)
+                            placeable = placeable[
+                                ~np.isin(placeable, stranded)]
+                    self._pending[g][d].extend(int(i) for i in placeable)
+                for i in placeable.tolist():
+                    res[int(i)] = step
+                for i in sids[in_res].tolist():
+                    res[int(i)] = step
+                state_g = sv.flush()
+            new_state[g] = state_g
+        return new_state, self._metrics(
+            met, ("lookups", "hits", "promoted", "demoted", "fresh",
+                  "unplaceable"))
+
+    def post_step(self, state: dict, step: int) -> tuple[dict, dict]:
+        """The admission pass (run just after the jitted step): ids that
+        entered HBM this step but are not admitted by the policy spill back
+        to host with their post-update rows."""
+        met = {k: 0 for k in _COUNTERS}
+        new_state = dict(state)
+        for g in self._pending:
+            state_g = new_state[g]
+            counts = self.counts[g]
+            for d in range(self.D):
+                pend = self._pending[g][d]
+                self._pending[g][d] = []
+                if not pend:
+                    continue
+                ids = np.asarray(pend, np.int64)
+                cnt = np.fromiter((counts.get(int(i), 0) for i in ids),
+                                  np.int64, ids.size)
+                keep = self.policy.admit(cnt)
+                rejected = ids[~keep]
+                if rejected.size:
+                    sv = _ShardView(state_g, d)
+                    n = self._demote(g, sv, rejected, self.resident[g][d])
+                    met["admission_demoted"] += n
+                    state_g = sv.flush()
+            new_state[g] = state_g
+        return new_state, self._metrics(met, ("admission_demoted",))
+
+    def evict_stale(self, state: dict, older_than: int) -> tuple[dict, dict]:
+        """The staleness pass: rows idle since before ``older_than`` spill
+        device→host (instead of the non-tiered discard)."""
+        met = {k: 0 for k in _COUNTERS}
+        new_state = dict(state)
+        for g in self.resident:
+            state_g = new_state[g]
+            for d in range(self.D):
+                res = self.resident[g][d]
+                stale = np.fromiter(
+                    (i for i, lu in res.items() if lu < older_than), np.int64)
+                if not stale.size:
+                    continue
+                sv = _ShardView(state_g, d)
+                met["spilled_stale"] += self._demote(g, sv, stale, res)
+                state_g = sv.flush()
+            new_state[g] = state_g
+        return new_state, self._metrics(met, ("spilled_stale",))
+
+    # ------------------------------------------------------------ recovery
+    def sync_from_state(self, state: dict, step_hint: int | None = None):
+        """Rebuild the residency mirror from device idmaps (after restore /
+        import). Frequency counts for unseen ids default to 1."""
+        for g in self.resident:
+            m = jax.tree.map(np.asarray, state[g]["idmap"])
+            for d in range(self.D):
+                occ = m.occupied[d] & (m.offsets[d] != idmap_lib.OVERFLOW_ROW)
+                keys = m.keys[d][occ]
+                lu = m.last_use[d][occ]
+                self.resident[g][d] = {
+                    int(k): int(step_hint if step_hint is not None else l)
+                    for k, l in zip(keys, lu)
+                }
+                counts = self.counts[g]
+                for k in keys:
+                    counts.setdefault(int(k), 1)
+                self._pending[g][d] = []
+
+    # ---------------------------------------------------------- checkpoint
+    def checkpoint_payload(self) -> dict[str, np.ndarray]:
+        """Flat {name: array} snapshot of the host tier + frequency counts
+        (self-describing shapes — saved via the saver's extra-tensor file)."""
+        out = {}
+        for g, host in self.host.items():
+            data = host.export()
+            out[f"{g}/host/ids"] = data["ids"]
+            out[f"{g}/host/emb"] = data["emb"]
+            out[f"{g}/host/last_use"] = data["last_use"]
+            for k, v in data["slots"].items():
+                out[f"{g}/host/slots/{k}"] = v
+            counts = self.counts[g]
+            cid = np.fromiter(counts.keys(), np.int64, len(counts))
+            out[f"{g}/counts/ids"] = cid
+            out[f"{g}/counts/vals"] = np.fromiter(
+                counts.values(), np.int64, len(counts))
+        return out
+
+    def restore_payload(self, flat: Mapping[str, np.ndarray] | None):
+        if not flat:
+            return
+        for g, host in self.host.items():
+            if f"{g}/host/ids" not in flat:
+                continue
+            host.load({
+                "ids": flat[f"{g}/host/ids"],
+                "emb": flat[f"{g}/host/emb"],
+                "last_use": flat[f"{g}/host/last_use"],
+                "slots": {k: flat[f"{g}/host/slots/{k}"]
+                          for k in self.slot_names},
+            })
+            self.counts[g] = {
+                int(i): int(c) for i, c in zip(flat[f"{g}/counts/ids"],
+                                               flat[f"{g}/counts/vals"])
+            }

@@ -2,7 +2,7 @@
 async loading, overflow accounting, neighbor-sampling invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.io.columnio import AsyncLoader, BatchSpec, ColumnReader, ColumnSchema, ColumnWriter
 from repro.io.datagen import ColumnGen, batch_spec_for, gen_for_specs, write_table

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.fused_gather import ops as fg_ops, ref as fg_ref

@@ -23,6 +23,7 @@ def run_sub(body: str, n_dev: int = 8, timeout: int = 480) -> str:
         import jax.numpy as jnp
         import numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         assert jax.device_count() == {n_dev}
     """) + textwrap.dedent(body)
     env = dict(os.environ, PYTHONPATH=SRC)
@@ -40,7 +41,8 @@ class TestExchangeMultiDevice:
             from repro.core.feature_engine import FeatureSpec
             from repro.io.ragged import Ragged
 
-            mesh = jax.make_mesh((8,), ("data",))
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((8,), ("data",))
             specs = [FeatureSpec("f", transform="hash", emb_dim=8, pooling="sum")]
 
             def build(axes, n_dev):
@@ -75,7 +77,7 @@ class TestExchangeMultiDevice:
                 acts = eng8.activations(rr, pl, ids)["f"]
                 return acts
 
-            acts8 = jax.jit(jax.shard_map(
+            acts8 = jax.jit(shard_map(
                 step, mesh=mesh, in_specs=(sp, sp, sp), out_specs=sp,
                 check_vma=False))(state8, vals, splits)
             np.testing.assert_allclose(np.asarray(acts8), np.asarray(acts1),
@@ -91,7 +93,8 @@ class TestExchangeMultiDevice:
             from repro.io.ragged import Ragged
             from repro.optim.sparse_adam import SparseAdamConfig
 
-            mesh = jax.make_mesh((8,), ("data",))
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((8,), ("data",))
             specs = [FeatureSpec("f", transform="hash", emb_dim=4, pooling="sum")]
             eng = EmbeddingEngine(specs, EngineConfig(
                 mesh_axes=("data",), n_devices=8, rows_per_shard=256,
@@ -113,7 +116,7 @@ class TestExchangeMultiDevice:
                 delta = (rr2["dim4"] - rr["dim4"]) * valid[:, None]
                 return delta
 
-            delta = jax.jit(jax.shard_map(
+            delta = jax.jit(shard_map(
                 step2, mesh=mesh, in_specs=(sp, sp, sp), out_specs=sp,
                 check_vma=False))(state, vals, splits)
             d = np.asarray(delta)
@@ -131,7 +134,8 @@ class TestCellsMultiDevice:
             from repro.launch.cells import build_cell
             from repro.launch.common import CellOptions
 
-            mesh = jax.make_mesh((4, 2), ("data", "model"))
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((4, 2), ("data", "model"))
             shape = ShapeCell("train_batch", "train", {"batch": 32})
             cell = build_cell("dlrm-mlperf", "train_batch", mesh,
                               CellOptions(remat=False, zero1=False),
@@ -152,7 +156,8 @@ class TestCellsMultiDevice:
             from repro.launch.cells import build_cell
             from repro.launch.common import CellOptions
 
-            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((2, 4), ("data", "model"))
             shape = ShapeCell("train_4k", "train", {"seq_len": 32, "global_batch": 4})
             cell = build_cell("qwen2.5-3b", "train_4k", mesh,
                               CellOptions(remat=False, zero1=True),
@@ -174,7 +179,8 @@ class TestCellsMultiDevice:
             from repro.launch.cells import build_cell
             from repro.launch.common import CellOptions
 
-            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((2, 4), ("data", "model"))
             shape = ShapeCell("train_4k", "train", {"seq_len": 32, "global_batch": 4})
             cell = build_cell("qwen2-moe-a2.7b", "train_4k", mesh,
                               CellOptions(remat=False, zero1=False),
@@ -193,7 +199,8 @@ class TestCellsMultiDevice:
             from repro.models import transformer as tfm
             from repro.models.layers import FP32
 
-            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((2, 4), ("data", "model"))
             for n_kv in (4, 2):   # 4 = kv==tp path; 2 = GQA kv∤tp select path
                 cfg = tfm.TransformerConfig(name="t", n_layers=2, d_model=32,
                                             n_heads=8, n_kv_heads=n_kv,
@@ -225,7 +232,8 @@ class TestCellsMultiDevice:
             from repro.launch.cells import build_cell
             from repro.launch.common import CellOptions
 
-            mesh = jax.make_mesh((8,), ("data",))
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((8,), ("data",))
             shape = ShapeCell("molecule", "graph_batch",
                               {"n_nodes": 10, "n_edges": 20, "batch": 16,
                                "d_feat": 8, "n_classes": 2})
@@ -257,7 +265,8 @@ class TestCellsMultiDevice:
             from jax.sharding import PartitionSpec as P
 
             n_dev = jax.device_count()
-            mesh = jax.make_mesh((n_dev,), ("data",))
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((n_dev,), ("data",))
             specs = [FeatureSpec("f", transform="hash", emb_dim=4, pooling="sum")]
             eng = EmbeddingEngine(specs, EngineConfig(
                 mesh_axes=("data",), n_devices=n_dev, rows_per_shard=128,
@@ -279,7 +288,7 @@ class TestCellsMultiDevice:
                                           jnp.int32(1))
                     return jax.tree.map(lambda x: x[None], st)
 
-                state = jax.jit(jax.shard_map(step, mesh=mesh,
+                state = jax.jit(shard_map(step, mesh=mesh,
                     in_specs=(sp, sp, sp), out_specs=sp, check_vma=False))(
                     state, vals, splits)
                 rows = eng.export_rows(state)

@@ -10,16 +10,14 @@ import pytest
 from repro.configs.base import ShapeCell
 from repro.launch.cells import build_cell
 from repro.launch.common import CellOptions
+from repro.launch.mesh import make_test_mesh
 from repro.pipelines import (
     OnlineWindowPipeline, StragglerWatchdog, TrainConfig, Trainer, multitask_loss,
 )
 
 
 def _mesh():
-    devs = np.array(jax.devices())
-    return jax.make_mesh((devs.size,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 1,
-                         devices=devs)
+    return make_test_mesh()
 
 
 def _cell(batch=32):
