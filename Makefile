@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test bench bench-storage
+.PHONY: test bench bench-storage bench-obs
 
 test:
 	python -m pytest -x -q
@@ -12,3 +12,6 @@ bench:
 
 bench-storage:
 	python -m benchmarks.run --only storage
+
+bench-obs:
+	python -m benchmarks.run --only obs

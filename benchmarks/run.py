@@ -4,9 +4,15 @@
   table2  E2E step, sparse vs overall           (paper §3.2, Table 2)
   storage tiered-store hit-rate/throughput sweep (capacity × policy;
           emits BENCH_storage.json — DESIGN.md §3)
+  obs     observability instrumentation overhead (emits BENCH_obs.json —
+          DESIGN.md §9)
   roofline summarize dry-run roofline terms     (paper Fig. 2/3; §Roofline)
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table2,storage,roofline]
+Every bench folds its headline numbers into the process-wide
+``obs.MetricsRegistry`` (roofline terms under ``roofline/…``, operator
+quality under ``mbu/…``) so one snapshot covers kernels AND runtime.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,table2,storage,obs,roofline]
 """
 from __future__ import annotations
 
@@ -17,7 +23,11 @@ import sys
 
 
 def _roofline_summary():
-    """Aggregate reports/dryrun/*.json into the §Roofline table."""
+    """Aggregate reports/dryrun/*.json into the §Roofline table, folding
+    each row's terms into the unified registry (``roofline/…`` gauges)."""
+    from repro import obs
+
+    reg = obs.get_registry()
     rep = pathlib.Path(__file__).resolve().parents[1] / "reports" / "dryrun"
     rows = []
     for p in sorted(rep.glob("*.json")):
@@ -25,6 +35,7 @@ def _roofline_summary():
         if not d.get("ok") or d.get("tag"):
             continue
         r = d["roofline"]
+        obs.record_roofline(d["arch"], d["shape"], d["mesh"], r, reg)
         rows.append((d["arch"], d["shape"], d["mesh"], r))
     print("=" * 110)
     print("Roofline terms per (arch × shape × mesh) — from compiled dry-run "
@@ -60,6 +71,10 @@ def main(argv=None) -> int:
         from benchmarks import table3_storage
 
         table3_storage.run()
+    if "obs" in which or "table4" in which:
+        from benchmarks import table4_obs
+
+        table4_obs.run()
     if "roofline" in which:
         _roofline_summary()
     return 0

@@ -257,12 +257,20 @@ def run(ops=None):
     print("  [CPU backend → the comparable number is the relative speedup; "
           "absolute v5e MBU: §Roofline]")
     print("=" * 92, flush=True)
+    from repro import obs
+
+    reg = obs.get_registry()
     rows = {}
     for name, fn in BENCHES.items():
         if ops and name not in ops:
             continue
         r = fn(rng)
         rows[name] = r
+        # fold kernel-quality numbers into the unified registry namespace
+        base = f"mbu/{obs.sanitize(name)}"
+        reg.gauge(f"{base}/speedup").set(r["speedup"])
+        reg.gauge(f"{base}/fused_gbps").set(r["fused_bw_gbs"])
+        reg.gauge(f"{base}/essential_mb").set(r["essential_mb"])
         print(f"{r['name']:14s} unfused={r['unfused_ms']:9.2f}ms "
               f"fused={r['fused_ms']:9.2f}ms  speedup={r['speedup']:6.2f}x  "
               f"(ess {r['essential_mb']:7.1f}MB → {r['fused_bw_gbs']:6.2f} GB/s)",

@@ -98,13 +98,28 @@ def _gc(directory: pathlib.Path, keep_last: int):
 
 class AsyncSaver:
     """Background-thread saver; at most one save in flight (paper: hide
-    checkpoint latency behind training)."""
+    checkpoint latency behind training).
 
-    def __init__(self, directory, n_shards: int = 4, keep_last: int = 3):
+    Reports into an ``obs.MetricsRegistry`` (default: the process-wide one)
+    under the ``ckpt/`` namespace: save count, bytes written, background
+    save duration, and how long the train loop actually *blocked* waiting
+    for a previous save — the number that tells you whether checkpoint
+    latency is really hidden behind training.
+    """
+
+    def __init__(self, directory, n_shards: int = 4, keep_last: int = 3,
+                 registry=None):
+        from repro import obs  # local import: saver is imported early
         self.directory = directory
         self.n_shards = n_shards
         self.keep_last = keep_last
         self._thread: threading.Thread | None = None
+        reg = registry if registry is not None else obs.get_registry()
+        self._c_saves = reg.counter("ckpt/saves")
+        self._c_bytes = reg.counter("ckpt/bytes_written")
+        self._h_save = reg.histogram("ckpt/save_s")
+        self._h_block = reg.histogram("ckpt/wait_block_s")
+        self._g_step = reg.gauge("ckpt/last_saved_step")
 
     def save(self, tree, step: int,
              extra_tensors: dict[str, np.ndarray] | None = None):
@@ -112,17 +127,27 @@ class AsyncSaver:
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async write
         if extra_tensors:  # snapshot too: the host tier keeps mutating
             extra_tensors = {k: np.array(v) for k, v in extra_tensors.items()}
+        nbytes = sum(np.asarray(l).nbytes for l in jax.tree.leaves(host_tree))
+        if extra_tensors:
+            nbytes += sum(v.nbytes for v in extra_tensors.values())
 
         def run():
+            t0 = time.perf_counter()
             save(host_tree, self.directory, step, self.n_shards,
                  keep_last=self.keep_last, extra_tensors=extra_tensors)
+            self._h_save.observe(time.perf_counter() - t0)
+            self._c_saves.inc()
+            self._c_bytes.inc(nbytes)
+            self._g_step.set(step)
 
         self._thread = threading.Thread(target=run, daemon=True)
         self._thread.start()
 
     def wait(self):
         if self._thread is not None:
+            t0 = time.perf_counter()
             self._thread.join()
+            self._h_block.observe(time.perf_counter() - t0)
             self._thread = None
 
 

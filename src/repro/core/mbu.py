@@ -109,12 +109,16 @@ class MBUResult:
 
 
 def measure(traffic: OpTraffic, fn: Callable, *args, iters: int = 10,
-            warmup: int = 2) -> MBUResult:
+            warmup: int = 2, registry=None) -> MBUResult:
     """Wall-time MBU of ``fn(*args)`` on the current backend.
 
     On this CPU container the absolute MBU is not meaningful against the
     v5e peak; the harness reports *relative* numbers (fused vs naive on the
     same backend), which is the paper's Table-1 comparison shape.
+
+    ``registry`` (an ``obs.MetricsRegistry``) folds the result into the
+    unified ``mbu/`` namespace so kernel-quality and runtime metrics land
+    in one snapshot (DESIGN.md §9).
     """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
@@ -124,10 +128,16 @@ def measure(traffic: OpTraffic, fn: Callable, *args, iters: int = 10,
     jax.block_until_ready(out)
     dt = (time.perf_counter() - t0) / iters
     bw = traffic.essential_bytes / dt
-    return MBUResult(traffic.name, traffic.essential_bytes, dt, bw, bw / PEAK_HBM_BW)
+    res = MBUResult(traffic.name, traffic.essential_bytes, dt, bw,
+                    bw / PEAK_HBM_BW)
+    if registry is not None:
+        from repro.obs import record_mbu
+        record_mbu(res, registry)
+    return res
 
 
-def structural(traffic: OpTraffic, fn: Callable, *args) -> MBUResult:
+def structural(traffic: OpTraffic, fn: Callable, *args,
+               registry=None) -> MBUResult:
     """Dry-run MBU: essential vs compiled `bytes accessed` (moved bytes).
 
     mbu_structural = BI = essential / moved — the fraction of the memory
@@ -142,8 +152,12 @@ def structural(traffic: OpTraffic, fn: Callable, *args) -> MBUResult:
     moved = int(cost.get("bytes accessed", 0)) or None
     bi = traffic.essential_bytes / moved if moved else None
     wall = (moved or traffic.essential_bytes) / PEAK_HBM_BW
-    return MBUResult(
+    res = MBUResult(
         traffic.name, traffic.essential_bytes, wall,
         traffic.essential_bytes / wall, bi or 0.0,
         moved_bytes=moved, bandwidth_intensity=bi,
     )
+    if registry is not None:
+        from repro.obs import record_mbu
+        record_mbu(res, registry)
+    return res

@@ -31,6 +31,7 @@ import json
 import pathlib
 import queue
 import threading
+import time
 from typing import Iterator, Mapping, Sequence
 
 import numpy as np
@@ -197,13 +198,21 @@ class AsyncLoader:
 
     Yields {col: Ragged} batches assembled on the host; `overflow` counts
     ids dropped to the static budget (never silent).
+
+    Reports into an ``obs.MetricsRegistry`` (default: process-wide) under
+    the ``io/`` namespace: row groups read, batches assembled, rows,
+    overflow ids, per-group read+decompress time, and prefetch-queue depth
+    (the gauge that tells you whether IO is hiding behind compute — a
+    persistently empty queue means the Trainer's ``data_wait`` phase is
+    about to show up in the straggler watchdog).
     """
 
     def __init__(self, table_dir: str | pathlib.Path, spec: BatchSpec,
                  columns: Sequence[str] | None = None,
                  shard: tuple[int, int] = (0, 1), n_threads: int = 4,
                  prefetch: int = 8, loop: bool = False, start_part: int = 0,
-                 start_group: int = 0):
+                 start_group: int = 0, registry=None):
+        from repro import obs  # local import: io has no other repro deps
         parts = sorted(pathlib.Path(table_dir).glob("part-*.col"))
         self.parts = [p for i, p in enumerate(parts) if i % shard[1] == shard[0]]
         assert self.parts, f"no parts for shard {shard} in {table_dir}"
@@ -212,6 +221,13 @@ class AsyncLoader:
         self.loop = loop
         self.overflow = 0
         self.rows_seen = 0
+        reg = registry if registry is not None else obs.get_registry()
+        self._c_groups = reg.counter("io/row_groups_read")
+        self._c_batches = reg.counter("io/batches_assembled")
+        self._c_rows = reg.counter("io/rows")
+        self._c_overflow = reg.counter("io/overflow_ids")
+        self._h_read = reg.histogram("io/read_group_s")
+        self._g_depth = reg.gauge("io/queue_depth")
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._work: queue.Queue = queue.Queue()
         self._stop = threading.Event()
@@ -241,9 +257,13 @@ class AsyncLoader:
                 return
             if pi not in readers:
                 readers[pi] = ColumnReader(self.parts[pi], self.columns)
+            t0 = time.perf_counter()
             cols = readers[pi].read_group(gi)
+            self._h_read.observe(time.perf_counter() - t0)
+            self._c_groups.inc()
             for batch in self._assemble(cols):
                 self._q.put(batch)
+                self._g_depth.set(self._q.qsize())
             with self._cursor_lock:
                 self.cursor = {"part": pi, "group": gi + 1}
             if self.loop:
@@ -263,6 +283,7 @@ class AsyncLoader:
                 blens = lens[s: s + br].copy()
                 if flat.shape[0] > budget:  # truncate & count
                     self.overflow += int(flat.shape[0] - budget)
+                    self._c_overflow.inc(int(flat.shape[0] - budget))
                     cum = np.cumsum(blens)
                     blens = np.where(cum <= budget, blens, np.maximum(
                         budget - np.concatenate([[0], cum[:-1]]), 0)).astype(np.int32)
@@ -276,6 +297,8 @@ class AsyncLoader:
                 dt = jnp.int64 if np.issubdtype(vals.dtype, np.integer) else jnp.float32
                 batch[k] = Ragged(jnp.asarray(pad, dtype=dt), jnp.asarray(splits))
             self.rows_seen += br
+            self._c_batches.inc()
+            self._c_rows.inc(br)
             yield batch
 
     def __iter__(self):

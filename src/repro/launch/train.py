@@ -58,6 +58,12 @@ def main(argv=None) -> int:
     p.add_argument("--use-pallas", action="store_true")
     p.add_argument("--log-every", type=int, default=10)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--telemetry", default=None, metavar="PATH",
+                   help="write a JSONL step-phase trace (DESIGN.md §9)")
+    p.add_argument("--console-every", type=int, default=0,
+                   help="print a registry report every N steps")
+    p.add_argument("--profile-spans", action="store_true",
+                   help="bridge step-phase spans to jax.profiler")
     args = p.parse_args(argv)
 
     mesh = small_mesh()
@@ -69,7 +75,10 @@ def main(argv=None) -> int:
 
     tcfg = TrainConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                        ckpt_every=args.ckpt_every, resume=args.resume,
-                       log_every=args.log_every)
+                       log_every=args.log_every,
+                       telemetry_path=args.telemetry,
+                       console_every=args.console_every,
+                       profile_spans=args.profile_spans)
     trainer = Trainer(cell, tcfg)
 
     with mesh:
@@ -94,6 +103,19 @@ def main(argv=None) -> int:
           + (", PREEMPTED" if res.preempted else ""))
     if res.straggler_events:
         print(f"straggler events: {len(res.straggler_events)}")
+        for ev in res.straggler_events[-3:]:
+            print(f"  step {ev.step}: {ev.wall_s*1e3:.1f}ms "
+                  f"(thresh {ev.threshold*1e3:.1f}ms, phase={ev.phase})")
+    # phase timeline summary from the unified registry (DESIGN.md §9)
+    snap = res.registry.snapshot()
+    for name in sorted(snap):
+        if name.startswith("trace/") and isinstance(snap[name], dict) \
+                and snap[name].get("count"):
+            s = snap[name]
+            print(f"{name:28s} p50={s['p50']*1e3:8.3f}ms "
+                  f"p99={s['p99']*1e3:8.3f}ms total={s['sum']:.3f}s")
+    if args.telemetry:
+        print(f"telemetry trace: {args.telemetry}")
     return 0
 
 

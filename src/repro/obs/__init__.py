@@ -1,0 +1,48 @@
+"""repro.obs — unified observability layer (DESIGN.md §9).
+
+One registry, one span taxonomy, one export format:
+
+  * ``MetricsRegistry`` — counters / gauges / streaming histograms, the
+    single sink every subsystem reports into under ``subsystem/metric``
+    names (registry.py).
+  * ``Tracer`` — step-phase span tracing for the train loop, with an
+    optional ``jax.profiler`` bridge (tracing.py).
+  * ``TelemetryWriter`` / ``ConsoleReporter`` — rotating JSONL export and
+    periodic human-readable reporting (telemetry.py).
+  * ``record_mbu`` / ``record_roofline`` — fold kernel-quality numbers
+    into the same namespace (mbu_bridge.py).
+
+A process-wide default registry lets far-apart components (an
+EmbeddingEngine's tiered store, an AsyncLoader thread, the Trainer) share
+one sink without plumbing; tests that need isolation construct their own
+``MetricsRegistry`` and pass it down, or call ``reset_default_registry``.
+"""
+from __future__ import annotations
+
+from repro.obs.mbu_bridge import record_mbu, record_roofline  # noqa: F401
+from repro.obs.registry import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, NAME_RE, check_name,
+    sanitize, valid_name,
+)
+from repro.obs.telemetry import (  # noqa: F401
+    ConsoleReporter, TelemetryWriter, read_jsonl,
+)
+from repro.obs.tracing import PHASES, StepTrace, Tracer  # noqa: F401
+
+_default_registry = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-wide default registry."""
+    return _default_registry
+
+
+def set_registry(reg: MetricsRegistry) -> MetricsRegistry:
+    global _default_registry
+    _default_registry = reg
+    return reg
+
+
+def reset_default_registry() -> MetricsRegistry:
+    """Swap in a fresh default registry (test isolation)."""
+    return set_registry(MetricsRegistry())

@@ -1,0 +1,255 @@
+"""MetricsRegistry — the single sink for runtime + kernel-quality metrics
+(DESIGN.md §9).
+
+Every subsystem (Trainer, TieredEmbeddingStore, AsyncLoader, AsyncSaver,
+the MBU/roofline bridge) registers instruments here under a unified naming
+scheme:
+
+    <subsystem>/<metric>[_<unit>]     e.g.  storage/hits, trainer/step_wall_s
+
+Names are validated at registration: lower snake_case segments joined by
+``/`` with at least one subsystem prefix — a misnamed metric is a bug, not
+a style nit, because downstream tooling (BENCH_*.json, the JSONL trace,
+dashboards) keys on stable names.
+
+Three instrument kinds:
+  * ``Counter``   — monotone accumulator (events, rows, bytes).
+  * ``Gauge``     — last-value (occupancy, hit-rate, last step).
+  * ``Histogram`` — streaming distribution: count/sum/min/max plus p50,
+    p95, p99 via the P² algorithm (Jain & Chlamtac 1985) — O(1) memory,
+    no samples stored, which is what a 1,500-accelerator run needs.
+
+All mutating ops are thread-safe (AsyncLoader workers and the AsyncSaver
+thread write concurrently with the train loop).
+"""
+from __future__ import annotations
+
+import math
+import re
+import threading
+
+NAME_RE = re.compile(r"^[a-z][a-z0-9_]*(/[a-z][a-z0-9_]*)+$")
+
+
+def valid_name(name: str) -> bool:
+    return bool(NAME_RE.match(name))
+
+
+def check_name(name: str) -> str:
+    if not valid_name(name):
+        raise ValueError(
+            f"bad metric name {name!r}: want snake_case segments joined by "
+            "'/' with a subsystem prefix, e.g. 'storage/hits'")
+    return name
+
+
+def sanitize(fragment: str) -> str:
+    """Coerce an arbitrary label (arch id, op name) into one legal
+    snake_case name segment: ``wide-deep`` → ``wide_deep``."""
+    s = re.sub(r"[^a-z0-9_]", "_", str(fragment).lower()).strip("_")
+    return s or "x"
+
+
+class Counter:
+    kind = "counter"
+    __slots__ = ("name", "_v", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._v = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, n: float = 1.0):
+        with self._lock:
+            self._v += n
+
+    @property
+    def value(self) -> float:
+        return self._v
+
+    def read(self):
+        return self._v
+
+
+class Gauge:
+    kind = "gauge"
+    __slots__ = ("name", "_v", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._v = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, v: float):
+        with self._lock:
+            self._v = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._v
+
+    def read(self):
+        return self._v
+
+
+class _P2Quantile:
+    """Single-quantile P² estimator: 5 markers, O(1) update, no samples.
+
+    Until 5 observations arrive it falls back to the exact small-sample
+    quantile of the buffered values."""
+
+    __slots__ = ("p", "_q", "_pos", "_des", "_inc")
+
+    def __init__(self, p: float):
+        self.p = float(p)
+        self._q: list[float] = []
+        self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+        self._des = [1.0, 1 + 2 * p, 1 + 4 * p, 3 + 2 * p, 5.0]
+        self._inc = [0.0, p / 2, p, (1 + p) / 2, 1.0]
+
+    def observe(self, x: float):
+        q = self._q
+        if len(q) < 5:
+            q.append(x)
+            q.sort()
+            return
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = next(i for i in range(4) if q[i] <= x < q[i + 1])
+        for i in range(k + 1, 5):
+            self._pos[i] += 1
+        for i in range(5):
+            self._des[i] += self._inc[i]
+        for i in (1, 2, 3):
+            d = self._des[i] - self._pos[i]
+            if ((d >= 1 and self._pos[i + 1] - self._pos[i] > 1)
+                    or (d <= -1 and self._pos[i - 1] - self._pos[i] < -1)):
+                s = 1 if d >= 0 else -1
+                qn = self._parabolic(i, s)
+                if not (q[i - 1] < qn < q[i + 1]):  # fall back to linear
+                    qn = q[i] + s * (q[i + s] - q[i]) / (
+                        self._pos[i + s] - self._pos[i])
+                q[i] = qn
+                self._pos[i] += s
+
+    def _parabolic(self, i: int, s: int) -> float:
+        q, n = self._q, self._pos
+        return q[i] + s / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+
+    @property
+    def value(self) -> float:
+        q = self._q
+        if not q:
+            return math.nan
+        if len(q) < 5:
+            return q[min(int(self.p * len(q)), len(q) - 1)]
+        return q[2]
+
+
+class Histogram:
+    kind = "histogram"
+    __slots__ = ("name", "count", "sum", "min", "max", "_quants", "_lock")
+
+    def __init__(self, name: str, quantiles: tuple[float, ...] = (0.5, 0.95, 0.99)):
+        self.name = name
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._quants = {p: _P2Quantile(p) for p in quantiles}
+        self._lock = threading.Lock()
+
+    def observe(self, x: float):
+        x = float(x)
+        with self._lock:
+            self.count += 1
+            self.sum += x
+            self.min = min(self.min, x)
+            self.max = max(self.max, x)
+            for q in self._quants.values():
+                q.observe(x)
+
+    def quantile(self, p: float) -> float:
+        return self._quants[p].value
+
+    def summary(self) -> dict[str, float]:
+        if not self.count:
+            return {"count": 0}
+        out = {"count": self.count, "sum": self.sum,
+               "mean": self.sum / self.count, "min": self.min, "max": self.max}
+        for p, est in self._quants.items():
+            out[f"p{int(round(p * 100))}"] = est.value
+        return out
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else math.nan
+
+    def read(self):
+        return self.summary()
+
+
+class MetricsRegistry:
+    """Create-or-get instrument registry. A name is bound to one instrument
+    kind for the registry's lifetime — re-registering with a different kind
+    raises (two subsystems silently sharing a name is a bug)."""
+
+    def __init__(self):
+        self._metrics: dict[str, Counter | Gauge | Histogram] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, cls, *args):
+        check_name(name)
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, *args)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as {m.kind}, "
+                    f"requested {cls.kind}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str,
+                  quantiles: tuple[float, ...] = (0.5, 0.95, 0.99)) -> Histogram:
+        return self._get(name, Histogram, quantiles)
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> dict:
+        """{name: scalar} for counters/gauges, {name: summary dict} for
+        histograms — JSON-ready (the TelemetryWriter summary record)."""
+        with self._lock:
+            items = list(self._metrics.items())
+        return {k: m.read() for k, m in items}
+
+    def flat(self) -> dict[str, float]:
+        """Fully-flat {name: float} view; histogram summaries expand to
+        ``<name>/p50`` etc. (for console reporters / BENCH json)."""
+        out: dict[str, float] = {}
+        for k, m in self.snapshot().items():
+            if isinstance(m, dict):
+                for sk, sv in m.items():
+                    out[f"{k}/{sk}"] = sv
+            else:
+                out[k] = m
+        return out

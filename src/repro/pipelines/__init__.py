@@ -1,4 +1,5 @@
 from repro.pipelines.trainer import (  # noqa: F401
-    PreemptionGuard, StragglerWatchdog, TrainConfig, Trainer, TrainResult,
+    PreemptionGuard, StragglerEvent, StragglerWatchdog, TrainConfig, Trainer,
+    TrainResult,
 )
 from repro.pipelines.windows import OnlineWindowPipeline, multitask_loss  # noqa: F401

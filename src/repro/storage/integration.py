@@ -9,6 +9,14 @@ Trainer's step-edge hook protocol (pipelines/trainer.py):
                             extra-tensor file, then residency resync
   evict_fn   → engine.evict_to_host      (staleness pass spills, not drops)
 
+Hook metrics use the unified obs naming scheme (DESIGN.md §9): every key
+is ``storage/<metric>`` and must pass ``obs.valid_name``. Keys ending in
+``_rows`` / ``_rate`` are occupancy/ratio gauges; all others are interval
+counts — the Trainer sums counts across a log interval and keeps the last
+gauge value, so logged rows cover the whole interval. The store itself
+also feeds the shared MetricsRegistry; these dicts are the per-step view
+that lands in ``metrics_history`` and the JSONL step records.
+
 The hooks are deliberately cell-agnostic: ``ids_fn(batch)`` maps a batch to
 the {feature: Ragged} id pytree the engine's ``fetch_local`` will see, and
 ``state_key`` locates the engine's sparse state inside the trainer state
@@ -19,6 +27,8 @@ from __future__ import annotations
 from typing import Any, Callable, Mapping
 
 import numpy as np
+
+from repro.obs import check_name
 
 
 def _get(state, state_key):
@@ -65,4 +75,4 @@ class StorageTrainerHooks:
 
 
 def _prefix(met: dict) -> dict:
-    return {f"storage/{k}": v for k, v in met.items()}
+    return {check_name(f"storage/{k}"): v for k, v in met.items()}

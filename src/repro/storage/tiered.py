@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import blocks as blocks_lib
 from repro.core import idmap as idmap_lib
 from repro.core.exchange import _owner_of
@@ -114,6 +115,7 @@ class TieredEmbeddingStore:
         n_devices: int,
         cfg: StorageConfig,
         slot_names: tuple[str, ...] = ("m", "v"),
+        registry: obs.MetricsRegistry | None = None,
     ):
         self.cfg = cfg
         self.D = n_devices
@@ -134,6 +136,14 @@ class TieredEmbeddingStore:
             g: [list() for _ in range(n_devices)] for g in group_shapes
         }
         self.totals = {k: 0 for k in _COUNTERS}
+        # obs wiring (DESIGN.md §9): counters/gauges under the unified
+        # ``storage/`` namespace, shared with the Trainer's registry
+        reg = registry if registry is not None else obs.get_registry()
+        self._obs_counters = {k: reg.counter(f"storage/{k}")
+                              for k in _COUNTERS}
+        self._g_host = reg.gauge("storage/host_rows")
+        self._g_device = reg.gauge("storage/device_rows")
+        self._g_hit = reg.gauge("storage/hit_rate")
 
     # --------------------------------------------------------------- helpers
     def _owner_np(self, ids: np.ndarray) -> np.ndarray:
@@ -155,12 +165,17 @@ class TieredEmbeddingStore:
         the current occupancy gauges."""
         for k, v in step_counts.items():
             self.totals[k] += v
+            if v:
+                self._obs_counters[k].inc(v)
         m = {k: step_counts[k] for k in keys}
         if "lookups" in keys:
             m["hit_rate"] = (step_counts["hits"] / step_counts["lookups"]
                              if step_counts["lookups"] else 1.0)
+            self._g_hit.set(m["hit_rate"])
         m["host_rows"] = self.host_rows()
         m["device_rows"] = self.device_resident()
+        self._g_host.set(m["host_rows"])
+        self._g_device.set(m["device_rows"])
         return m
 
     # ------------------------------------------------------- tier movement

@@ -1,0 +1,411 @@
+"""Observability layer tests (DESIGN.md §9): registry instruments,
+streaming quantiles, JSONL telemetry + rotation, step-phase tracing, the
+phase-aware straggler watchdog, PreemptionGuard round-trip, interval
+hook-metric accumulation, metric-name lint — and the acceptance run: a
+telemetry-enabled Trainer emits a parseable phase-attributed JSONL trace
+with storage/IO counters under unified names."""
+import os
+import signal
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.pipelines import (
+    PreemptionGuard, StragglerWatchdog, TrainConfig, Trainer,
+)
+
+PHASES = ("data_wait", "pre_step", "device_step", "post_step")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_counter_gauge(self):
+        reg = obs.MetricsRegistry()
+        c = reg.counter("io/rows")
+        c.inc()
+        c.inc(4)
+        assert c.value == 5
+        assert reg.counter("io/rows") is c  # create-or-get
+        g = reg.gauge("storage/host_rows")
+        g.set(7)
+        g.set(3)
+        assert g.value == 3
+        assert reg.snapshot() == {"io/rows": 5, "storage/host_rows": 3}
+
+    def test_histogram_streaming_quantiles(self):
+        reg = obs.MetricsRegistry()
+        h = reg.histogram("trainer/step_wall_s")
+        r = np.random.default_rng(0)
+        xs = r.lognormal(0.0, 0.5, 10_000)
+        for x in xs:
+            h.observe(x)
+        s = h.summary()
+        assert s["count"] == 10_000
+        assert s["min"] == xs.min() and s["max"] == xs.max()
+        np.testing.assert_allclose(s["mean"], xs.mean(), rtol=1e-6)
+        # P² estimates vs exact quantiles — no samples stored
+        for p in (50, 95, 99):
+            np.testing.assert_allclose(
+                s[f"p{p}"], np.percentile(xs, p), rtol=0.05)
+
+    def test_histogram_small_sample(self):
+        h = obs.MetricsRegistry().histogram("a/b")
+        for x in (3.0, 1.0, 2.0):
+            h.observe(x)
+        assert h.summary()["p50"] == 2.0
+
+    def test_name_lint(self):
+        reg = obs.MetricsRegistry()
+        for bad in ("BadName", "noprefix", "io/CamelCase", "io/", "/io",
+                    "io//x", "io/has-dash", "9io/x"):
+            with pytest.raises(ValueError):
+                reg.counter(bad)
+        # multi-level prefixes are fine
+        reg.gauge("roofline/wide_deep/train_batch/cpu1/compute_s")
+
+    def test_kind_conflict(self):
+        reg = obs.MetricsRegistry()
+        reg.counter("io/rows")
+        with pytest.raises(TypeError):
+            reg.gauge("io/rows")
+
+    def test_flat_expands_histograms(self):
+        reg = obs.MetricsRegistry()
+        reg.histogram("io/read_group_s").observe(0.5)
+        flat = reg.flat()
+        assert flat["io/read_group_s/count"] == 1
+        assert flat["io/read_group_s/p50"] == 0.5
+        assert all(obs.valid_name(k) for k in flat)
+
+    def test_sanitize(self):
+        assert obs.sanitize("wide-deep") == "wide_deep"
+        assert obs.valid_name(f"mbu/{obs.sanitize('Ids Partition!')}/bi")
+
+
+# ---------------------------------------------------------------------------
+# telemetry writer
+# ---------------------------------------------------------------------------
+
+class TestTelemetryWriter:
+    def test_jsonl_roundtrip(self, tmp_path):
+        w = obs.TelemetryWriter(tmp_path / "t.jsonl")
+        w.emit({"type": "event", "x": 1})
+        w.emit({"type": "event", "x": np.int64(2), "arr": np.arange(2)})
+        w.close()
+        recs = obs.read_jsonl(tmp_path / "t.jsonl")
+        assert [r["x"] for r in recs] == [1, 2]
+        assert recs[1]["arr"] == [0, 1]
+        assert all("t" in r for r in recs)
+
+    def test_rotation(self, tmp_path):
+        w = obs.TelemetryWriter(tmp_path / "t.jsonl", max_bytes=200,
+                                max_files=2)
+        for i in range(50):
+            w.emit({"type": "event", "i": i})
+        w.close()
+        files = sorted(p.name for p in tmp_path.glob("t.jsonl*"))
+        assert files == ["t.jsonl", "t.jsonl.1", "t.jsonl.2"]
+        # every surviving file is parseable; the newest record survives
+        assert obs.read_jsonl(tmp_path / "t.jsonl")[-1]["i"] == 49
+        assert w.records_written == 50
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_step_record_and_histograms(self, tmp_path):
+        reg = obs.MetricsRegistry()
+        w = obs.TelemetryWriter(tmp_path / "t.jsonl")
+        tr = obs.Tracer(reg, w)
+        with tr.step(3) as st:
+            with tr.span("data_wait"):
+                pass
+            with tr.span("device_step"):
+                pass
+            with tr.span("device_step"):  # repeated spans accumulate
+                pass
+            st.annotate(loss=0.5)
+        w.close()
+        (rec,) = obs.read_jsonl(tmp_path / "t.jsonl")
+        assert rec["type"] == "step" and rec["step"] == 3
+        assert set(rec["spans"]) == {"data_wait", "device_step"}
+        assert rec["loss"] == 0.5
+        assert reg.histogram("trace/device_step_s").count == 2
+
+    def test_standalone_span_and_cancel(self, tmp_path):
+        w = obs.TelemetryWriter(tmp_path / "t.jsonl")
+        tr = obs.Tracer(None, w)
+        with tr.span("checkpoint"):
+            pass
+        with tr.step(1) as st:
+            st.cancel()
+        w.close()
+        recs = obs.read_jsonl(tmp_path / "t.jsonl")
+        assert len(recs) == 1 and recs[0]["type"] == "span"
+        assert recs[0]["name"] == "checkpoint"
+
+
+# ---------------------------------------------------------------------------
+# watchdog edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+class TestWatchdogEdges:
+    def test_warmup_boundary(self):
+        wd = StragglerWatchdog(k=4.0, warmup=5)
+        # an outlier INSIDE warmup never flags (baseline still priming)
+        for i, dt in enumerate([0.1, 0.1, 5.0, 0.1, 0.1], start=1):
+            assert not wd.observe(i, dt)
+        # first post-warmup observation is judged against the EMA
+        assert wd.observe(6, 50.0)
+        assert len(wd.events) == 1
+
+    def test_zero_variance_stream(self):
+        wd = StragglerWatchdog(k=4.0, warmup=4)
+        for i in range(20):
+            assert not wd.observe(i, 0.1)   # identical steps: never flag
+        assert wd.var < 1e-9
+        # threshold floor is 5% of the mean, so 2× the constant flags
+        assert wd.observe(21, 0.2)
+
+    def test_baseline_freeze_on_anomaly(self):
+        wd = StragglerWatchdog(k=4.0, warmup=4)
+        for i in range(12):
+            wd.observe(i, 0.1)
+        mean_before = wd.mean
+        assert wd.observe(13, 10.0)          # anomalous step…
+        assert wd.mean == mean_before        # …does not move the baseline
+        assert not wd.observe(14, 0.1)       # normal step still normal
+
+    def test_ring_buffer_cap_and_dropped(self):
+        wd = StragglerWatchdog(k=4.0, warmup=2, max_events=4)
+        wd.observe(1, 0.1)
+        wd.observe(2, 0.1)
+        for s in range(3, 13):               # 10 stragglers
+            assert wd.observe(s, 10.0)
+        assert len(wd.events) == 4
+        assert wd.dropped == 6
+        assert wd.events[-1].step == 12      # newest kept
+
+    def test_phase_attribution(self):
+        wd = StragglerWatchdog(k=4.0, warmup=3)
+        base = {"data_wait": 0.01, "device_step": 0.09}
+        for i in range(10):
+            wd.observe(i, 0.1, base)
+        slow = {"data_wait": 0.91, "device_step": 0.09}
+        assert wd.observe(11, 1.0, slow)
+        assert wd.events[-1].phase == "data_wait"
+
+
+# ---------------------------------------------------------------------------
+# PreemptionGuard (satellite)
+# ---------------------------------------------------------------------------
+
+class TestPreemptionGuard:
+    def test_handler_roundtrip(self):
+        prev = signal.getsignal(signal.SIGUSR1)
+        guard = PreemptionGuard(install=True, signals=(signal.SIGUSR1,))
+        assert signal.getsignal(signal.SIGUSR1) == guard._handler
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert guard.requested
+        guard.restore()
+        assert signal.getsignal(signal.SIGUSR1) == prev
+        guard.restore()  # idempotent
+        assert signal.getsignal(signal.SIGUSR1) == prev
+
+    def test_default_installs_sigterm_only(self):
+        prev_term = signal.getsignal(signal.SIGTERM)
+        prev_int = signal.getsignal(signal.SIGINT)
+        guard = PreemptionGuard(install=True)
+        assert signal.getsignal(signal.SIGTERM) == guard._handler
+        assert signal.getsignal(signal.SIGINT) == prev_int  # untouched
+        guard.restore()
+        assert signal.getsignal(signal.SIGTERM) == prev_term
+
+
+# ---------------------------------------------------------------------------
+# Trainer loop: interval accumulation with a lightweight fake cell
+# ---------------------------------------------------------------------------
+
+class _FakeCell:
+    returns_state = True
+    donate_state = False
+
+    @staticmethod
+    def step_fn(state, batch):
+        return state, {"loss": jnp.float32(1.0)}
+
+
+class _CountingHooks:
+    """Deterministic per-step hook metrics: 1 hit + 2 lookups per step
+    pre-step, 1 admission demote per step post-step."""
+
+    def pre_step(self, state, batch, step):
+        return state, {"storage/hits": 1, "storage/lookups": 2,
+                       "storage/hit_rate": 0.5, "storage/host_rows": step}
+
+    def post_step(self, state, step):
+        return state, {"storage/admission_demoted": 1}
+
+
+class TestIntervalAccumulation:
+    def test_counts_cover_whole_interval(self):
+        tr = Trainer(_FakeCell(), TrainConfig(total_steps=10, log_every=5,
+                                              watchdog=False),
+                     hooks=_CountingHooks(), registry=obs.MetricsRegistry())
+        res = tr.run({"w": jnp.zeros(())}, iter(range(10)))
+        assert res.steps_run == 10
+        assert len(res.metrics_history) == 2
+        for row in res.metrics_history:
+            # counts are summed over the 5-step interval…
+            assert row["storage/hits"] == 5
+            assert row["storage/lookups"] == 10
+            assert row["storage/admission_demoted"] == 5
+            # …ratios recomputed over the interval, gauges keep last value
+            assert row["storage/hit_rate"] == 0.5
+        assert res.metrics_history[0]["storage/host_rows"] == 5
+        assert res.metrics_history[1]["storage/host_rows"] == 10
+
+    def test_log_every_one_matches_per_step(self):
+        tr = Trainer(_FakeCell(), TrainConfig(total_steps=3, log_every=1,
+                                              watchdog=False),
+                     hooks=_CountingHooks(), registry=obs.MetricsRegistry())
+        res = tr.run({"w": jnp.zeros(())}, iter(range(3)))
+        for row in res.metrics_history:
+            assert row["storage/hits"] == 1
+            assert row["storage/hit_rate"] == 0.5
+
+
+# ---------------------------------------------------------------------------
+# acceptance: telemetry-enabled Trainer run emits a phase-attributed trace
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def telemetry_run(tmp_path_factory):
+    from repro.configs.base import ShapeCell
+    from repro.launch.cells import build_cell
+    from repro.launch.common import CellOptions
+    from repro.launch.mesh import make_test_mesh
+    from repro.storage import StorageConfig
+
+    tmp = tmp_path_factory.mktemp("obs")
+    trace = tmp / "trace.jsonl"
+    steps = 12
+    reg = obs.MetricsRegistry()
+    obs.set_registry(reg)  # engine-internal store binds the default registry
+    try:
+        shape = ShapeCell("train_batch", "train", {"batch": 32})
+        cell = build_cell(
+            "wide-deep", "train_batch", make_test_mesh(),
+            CellOptions(remat=False, zero1=False,
+                        storage=StorageConfig(policy="lru"),
+                        storage_device_rows=512),
+            smoke=True, shape_override=shape)
+        tr = Trainer(cell, TrainConfig(total_steps=steps, log_every=4,
+                                       ckpt_dir=str(tmp / "ckpt"),
+                                       ckpt_every=6, watchdog=True,
+                                       telemetry_path=str(trace)),
+                     hooks=cell.storage_hooks, registry=reg)
+        with cell.mesh:
+            state = cell.init_state()
+            res = tr.run(state, (cell.make_batch(s) for s in range(steps)))
+    finally:
+        obs.reset_default_registry()
+    return res, obs.read_jsonl(trace), reg, steps
+
+
+class TestTrainerTelemetryAcceptance:
+    def test_every_step_has_phase_spans(self, telemetry_run):
+        res, recs, reg, steps = telemetry_run
+        assert res.steps_run == steps
+        step_recs = [r for r in recs if r["type"] == "step"]
+        assert [r["step"] for r in step_recs] == list(range(1, steps + 1))
+        for r in step_recs:
+            for phase in PHASES:
+                assert phase in r["spans"], (r["step"], phase)
+                assert r["spans"][phase] >= 0.0
+            assert r["wall_s"] > 0
+            assert "loss" in r["metrics"]
+
+    def test_checkpoint_span_present(self, telemetry_run):
+        _, recs, reg, _ = telemetry_run
+        ck = [r for r in recs if r["type"] == "step"
+              and "checkpoint" in r["spans"]]
+        assert any(r["step"] == 6 for r in ck)   # periodic save at step 6
+        assert reg.counter("ckpt/saves").value >= 1
+        assert reg.counter("ckpt/bytes_written").value > 0
+
+    def test_summary_record(self, telemetry_run):
+        _, recs, _, steps = telemetry_run
+        (summ,) = [r for r in recs if r["type"] == "summary"]
+        assert summ["steps_run"] == steps
+        assert summ["metrics"]["trainer/steps"] == steps
+        assert summ["metrics"]["trace/device_step_s"]["count"] == steps
+
+    def test_storage_counters_unified(self, telemetry_run):
+        res, _, reg, _ = telemetry_run
+        assert reg.counter("storage/lookups").value > 0
+        assert reg.counter("storage/promoted").value > 0
+        assert 0.0 < reg.gauge("storage/hit_rate").value <= 1.0
+        assert reg.gauge("storage/host_rows").value > 0
+        # history rows still carry the per-interval storage metrics
+        assert all("storage/hit_rate" in m for m in res.metrics_history)
+
+    def test_metric_name_lint(self, telemetry_run):
+        """Every name registered by a full trainer+storage+ckpt run is
+        stable snake_case with a subsystem prefix."""
+        _, _, reg, _ = telemetry_run
+        names = reg.names()
+        assert names, "registry is empty"
+        for n in names:
+            assert obs.NAME_RE.match(n), n
+        subsystems = {n.split("/")[0] for n in names}
+        assert {"trainer", "trace", "storage", "ckpt"} <= subsystems
+
+
+# ---------------------------------------------------------------------------
+# loader + mbu land in the same namespace
+# ---------------------------------------------------------------------------
+
+class TestUnifiedNamespace:
+    def test_loader_metrics(self, tmp_path):
+        from repro.io.columnio import (
+            AsyncLoader, BatchSpec, ColumnSchema, ColumnWriter,
+        )
+        reg = obs.MetricsRegistry()
+        with ColumnWriter(tmp_path / "part-000.col",
+                          [ColumnSchema("f")]) as w:
+            w.write_group({"f": [[1, 2], [3], [4, 5, 6], [7]] * 4})
+        loader = AsyncLoader(tmp_path, BatchSpec(4, {"f": 8}),
+                             n_threads=1, registry=reg)
+        batches = list(loader)
+        assert batches
+        assert reg.counter("io/row_groups_read").value == 1
+        assert reg.counter("io/batches_assembled").value == len(batches)
+        assert reg.counter("io/rows").value == 4 * len(batches)
+        assert reg.histogram("io/read_group_s").count == 1
+        for n in reg.names():
+            assert obs.NAME_RE.match(n), n
+
+    def test_mbu_bridge(self):
+        import jax.numpy as jnp
+
+        from repro.core import mbu
+        reg = obs.MetricsRegistry()
+        res = mbu.measure(mbu.t_mod(1024), lambda x: x % 97,
+                          jnp.arange(1024), iters=2, warmup=1, registry=reg)
+        flat = reg.flat()
+        assert flat["mbu/mod/mbu"] == pytest.approx(res.mbu)
+        assert flat["mbu/mod/achieved_gbps"] > 0
+        obs.record_roofline("wide-deep", "train_batch", "cpu:1",
+                            {"compute_s": 0.1, "bound": "memory"}, reg)
+        assert reg.gauge(
+            "roofline/wide_deep/train_batch/cpu_1/compute_s").value == 0.1
+        for n in reg.names():
+            assert obs.NAME_RE.match(n), n
