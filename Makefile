@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test bench bench-storage bench-obs
+.PHONY: test bench bench-storage bench-obs bench-check
 
 test:
 	python -m pytest -x -q
@@ -15,3 +15,12 @@ bench-storage:
 
 bench-obs:
 	python -m benchmarks.run --only obs
+
+# Perf gate (DESIGN.md §10): run the autoscaler companion bench (writes
+# BENCH_e2e_fixed.json + BENCH_e2e_autoscale.json from ONE calibration),
+# then fail if the closed-loop run regresses vs the fixed-config run.
+# Future PRs extend this pattern: snapshot a BENCH_*.json baseline, compare
+# with benchmarks/compare.py --max-regress.
+bench-check:
+	python -m benchmarks.table2_e2e --autoscale
+	python -m benchmarks.compare BENCH_e2e_fixed.json BENCH_e2e_autoscale.json --max-regress 5

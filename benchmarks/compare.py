@@ -1,0 +1,130 @@
+"""BENCH_*.json regression gate (ROADMAP item; the perf gate for PRs).
+
+Diffs two benchmark snapshots and exits non-zero when any shared metric
+regresses by more than ``--max-regress`` percent. Direction is inferred
+from the metric name (the repo's naming convention is the contract):
+
+  lower is better   *_ms / *_s / *_ns / *_us suffixes, and names
+                    containing wait / overhead / overflow / miss /
+                    dropped / unplaceable / stall
+  higher is better  names containing per_s / hit_rate / speedup / mbu /
+                    gbps / throughput / x (ratio suffixes like sparse_x)
+  unknown           reported informationally, never gated
+
+Usage (the ``make bench-check`` perf gate):
+
+  python -m benchmarks.compare BENCH_e2e_fixed.json BENCH_e2e_autoscale.json \\
+      --max-regress 5
+
+The baseline file is the reference ("old"); the candidate ("new") fails
+the gate if it is worse. Comparing an autoscale run against its
+fixed-config twin is the same operation as comparing yesterday's
+BENCH_obs.json against today's — one tool, both gates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import re
+import sys
+
+_LOWER = re.compile(
+    r"(_ms|_s|_ns|_us|_bytes)$|wait|overhead|overflow|miss|dropped"
+    r"|unplaceable|stall")
+_HIGHER = re.compile(
+    r"per_s|hit_rate|speedup|mbu|gbps|throughput|(_x)$|(_ratio)$")
+
+
+def direction(key: str) -> int:
+    """+1 = higher is better, -1 = lower is better, 0 = don't gate."""
+    leaf = key.rsplit("/", 1)[-1]
+    if _HIGHER.search(leaf) or _HIGHER.search(key):
+        return +1
+    if _LOWER.search(leaf) or _LOWER.search(key):
+        return -1
+    return 0
+
+
+def flatten(obj, prefix: str = "") -> dict[str, float]:
+    """Nested dicts → {'a/b/c': float}; non-numeric leaves are dropped."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        if math.isfinite(obj):
+            out[prefix] = float(obj)
+    return out
+
+
+def compare(old: dict, new: dict, max_regress_pct: float
+            ) -> tuple[list[dict], list[dict]]:
+    """→ (regressions, report rows) over the shared numeric keys."""
+    fo, fn = flatten(old), flatten(new)
+    rows, regressions = [], []
+    for k in sorted(set(fo) & set(fn)):
+        d = direction(k)
+        a, b = fo[k], fn[k]
+        if a == b:
+            pct = 0.0
+        elif a == 0:
+            # from-zero change: gate on the sign alone (can't express %)
+            pct = math.copysign(math.inf, (b - a) * -d) if d else 0.0
+        else:
+            pct = (b - a) / abs(a) * 100.0 * -d  # + = regression
+        row = {"key": k, "old": a, "new": b, "direction": d,
+               "regress_pct": pct if d else None}
+        rows.append(row)
+        if d and pct > max_regress_pct:
+            regressions.append(row)
+    return regressions, rows
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="diff two BENCH_*.json snapshots; exit 1 on regression")
+    p.add_argument("baseline", help="reference snapshot (old)")
+    p.add_argument("candidate", help="snapshot under test (new)")
+    p.add_argument("--max-regress", type=float, default=5.0, metavar="PCT",
+                   help="fail when any gated metric is worse by > PCT%%")
+    p.add_argument("--quiet", action="store_true",
+                   help="print only regressions")
+    args = p.parse_args(argv)
+
+    with open(args.baseline) as f:
+        old = json.load(f)
+    with open(args.candidate) as f:
+        new = json.load(f)
+    regressions, rows = compare(old, new, args.max_regress)
+
+    if not args.quiet:
+        print(f"{'metric':52s} {'old':>12s} {'new':>12s} {'Δ%':>9s}")
+        for r in rows:
+            if r["direction"] == 0:
+                tag = "     (info)"
+            else:
+                pct = r["regress_pct"]
+                tag = f"{-pct:+8.2f}%" if math.isfinite(pct) else "      ±inf"
+            print(f"{r['key']:52s} {r['old']:12.4g} {r['new']:12.4g} {tag}")
+    if not rows:
+        print("no shared numeric metrics — nothing compared", file=sys.stderr)
+        return 2
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} metric(s) regressed "
+              f"beyond {args.max_regress:g}%:")
+        for r in regressions:
+            how = "↑" if r["direction"] < 0 else "↓"
+            print(f"  {r['key']}: {r['old']:.6g} → {r['new']:.6g} "
+                  f"({how} worse by {r['regress_pct']:.1f}%)")
+        return 1
+    print(f"\nOK: no regression beyond {args.max_regress:g}% "
+          f"({sum(1 for r in rows if r['direction'])} gated, "
+          f"{sum(1 for r in rows if not r['direction'])} informational)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

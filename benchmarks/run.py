@@ -6,6 +6,9 @@
           emits BENCH_storage.json — DESIGN.md §3)
   obs     observability instrumentation overhead (emits BENCH_obs.json —
           DESIGN.md §9)
+  autoscale pipeline-autoscaler fixed vs closed-loop (emits
+          BENCH_e2e_fixed.json + BENCH_e2e_autoscale.json — DESIGN.md §10;
+          gated by ``make bench-check`` via benchmarks/compare.py)
   roofline summarize dry-run roofline terms     (paper Fig. 2/3; §Roofline)
 
 Every bench folds its headline numbers into the process-wide
@@ -75,6 +78,10 @@ def main(argv=None) -> int:
         from benchmarks import table4_obs
 
         table4_obs.run()
+    if "autoscale" in which:
+        from benchmarks import table2_e2e
+
+        table2_e2e.run_autoscale()
     if "roofline" in which:
         _roofline_summary()
     return 0

@@ -13,9 +13,23 @@ fit CPU), top-100 retrieval, DIN-style dense part.
                 comparator shape.
 
 The sparse/overall split mirrors the paper's Table 2 columns.
+
+``--autoscale`` runs the pipeline-autoscaler companion bench instead:
+real measured per-part read+decompress times over a synthetic slow-shard
+ColumnIO table and a real measured jitted-step compute time calibrate the
+deterministic ``SimPipeline`` (io/autoscale), which then replays the same
+workload fixed-config vs controller-driven. Both verdicts are written as
+``BENCH_e2e_fixed.json`` / ``BENCH_e2e_autoscale.json`` for the
+``make bench-check`` gate (benchmarks/compare.py) — deterministic given
+one calibration, so the gate does not flake on a loaded single-core host.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
 import time
 
 import jax
@@ -173,6 +187,112 @@ class E2EBench:
         return {"sparse_ms": sparse_t * 1e3, "overall_ms": full_t * 1e3}
 
 
+# ---------------------------------------------------------------- autoscale
+
+def _write_slow_shard_table(table: pathlib.Path, n_parts=4, n_groups=4,
+                            rows_per_group=1024, slow_part=0, slow_mult=8,
+                            seed=0) -> pathlib.Path:
+    """One part carries ``slow_mult``× the ids per row — a genuinely slower
+    shard (more bytes to read + decompress), not a sleep. Sizes are chosen
+    so group reads are comparable to the calibrated compute step: the
+    pipeline is IO-bound with one reader, compute-bound with several."""
+    from repro.io.columnio import ColumnSchema, ColumnWriter
+
+    table.mkdir(parents=True, exist_ok=True)
+    r = np.random.default_rng(seed)
+    schema = [ColumnSchema("ids", dtype="int64", ragged=True)]
+    for pi in range(n_parts):
+        k = 16 * (slow_mult if pi == slow_part else 1)
+        with ColumnWriter(table / f"part-{pi:05d}.col", schema) as w:
+            for _ in range(n_groups):
+                ids = r.integers(0, 1 << 30, size=(rows_per_group, k))
+                w.write_group({"ids": ids.tolist()})
+    return table
+
+
+def _calibrate_reads(table: pathlib.Path) -> dict[int, float]:
+    """Real per-part mean group read+decompress seconds."""
+    from repro.io.columnio import ColumnReader
+
+    out = {}
+    for pi, p in enumerate(sorted(table.glob("part-*.col"))):
+        rd = ColumnReader(p)
+        rd.read_group(0)  # touch the page cache once
+        t0 = time.perf_counter()
+        for gi in range(rd.n_groups):
+            rd.read_group(gi)
+        out[pi] = (time.perf_counter() - t0) / rd.n_groups
+    return out
+
+
+def _calibrate_compute(iters=30) -> float:
+    """Real per-step seconds of a small jitted DNN step (the consumer)."""
+    mlp = make_mlp(jax.random.PRNGKey(0), (64, 256, 256, 1))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256, 64)),
+                    jnp.float32)
+    f = jax.jit(lambda p, x: jnp.sum(mlp_apply(p, x, MIXED)))
+    jax.block_until_ready(f(mlp, x))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        y = f(mlp, x)
+    jax.block_until_ready(y)
+    return (time.perf_counter() - t0) / iters
+
+
+def run_autoscale(steps=400, out_dir: pathlib.Path | None = None):
+    """Fixed-config vs controller-driven pipeline over one calibration."""
+    from repro.io.autoscale import AutoscaleConfig, SimPipeline, simulate
+
+    out_dir = out_dir or pathlib.Path(__file__).resolve().parents[1]
+    with tempfile.TemporaryDirectory(prefix="recis_as_") as td:
+        table = _write_slow_shard_table(pathlib.Path(td) / "table")
+        part_service = _calibrate_reads(table)
+    consume_s = _calibrate_compute()
+    cal = {"part_service_ms": {str(k): v * 1e3
+                               for k, v in part_service.items()},
+           "compute_ms": consume_s * 1e3}
+    print("=" * 88)
+    print("Table 2 companion — pipeline autoscaler: fixed vs closed-loop "
+          "(calibrated SimPipeline)")
+    print("=" * 88)
+    print("calibration: " + ", ".join(
+        f"part{k}={v*1e3:.2f}ms" for k, v in part_service.items())
+        + f", compute={consume_s*1e3:.2f}ms")
+
+    # thresholds scale with the measured step time: waiting a quarter-step
+    # per step is starvation, a fiftieth is noise
+    cfg = AutoscaleConfig(min_readers=1, max_readers=4,
+                          starve_wait_s=0.25 * consume_s,
+                          idle_wait_s=0.02 * consume_s)
+    results = {}
+    for mode in ("fixed", "autoscale"):
+        sim = SimPipeline(part_service, n_readers=1, queue_capacity=8,
+                          consume_s=consume_s)
+        r = simulate(sim, steps, cfg if mode == "autoscale" else None)
+        payload = {
+            "mode": mode,
+            "calibration": cal,
+            "sim": {
+                "steps": steps,
+                "data_wait_total_s": r["total_wait_s"],
+                "data_wait_last20_mean_s": r["mean_wait_last20"],
+                "virtual_steps_per_s": steps / r["virtual_time_s"],
+                "n_readers_final": r["n_readers"],
+                "n_actions": len(r["actions"]),
+            },
+        }
+        path = out_dir / f"BENCH_e2e_{mode}.json"
+        path.write_text(json.dumps(payload, indent=2) + "\n")
+        results[mode] = payload
+        s = payload["sim"]
+        print(f"{mode:9s}: wait_total={s['data_wait_total_s']*1e3:8.1f}ms "
+              f"last20={s['data_wait_last20_mean_s']*1e3:6.2f}ms "
+              f"steps/s={s['virtual_steps_per_s']:7.1f} "
+              f"readers={s['n_readers_final']} actions={s['n_actions']} "
+              f"→ {path.name}")
+    return results
+
+
 def run(models=("mse", "lma")):
     print("=" * 88)
     print("Table 2 — E2E step time (ms): RecIS-fused vs naive-unfused; "
@@ -191,3 +311,19 @@ def run(models=("mse", "lma")):
               f"(sparse {naive['sparse_ms']/fused['sparse_ms']:4.2f}x, "
               f"overall {naive['overall_ms']/fused['overall_ms']:4.2f}x)")
     return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--autoscale", action="store_true",
+                    help="run the pipeline-autoscaler companion bench "
+                         "(writes BENCH_e2e_fixed.json / "
+                         "BENCH_e2e_autoscale.json)")
+    ap.add_argument("--steps", type=int, default=400,
+                    help="simulated consumer steps (autoscale mode)")
+    args = ap.parse_args()
+    if args.autoscale:
+        run_autoscale(steps=args.steps)
+    else:
+        run()
+    sys.exit(0)

@@ -12,10 +12,15 @@ Reader model:
   * distributed workers read disjoint part shards (`shard(i, n)`);
   * a multi-threaded `AsyncLoader` prefetches and assembles fixed-budget
     `Ragged` device batches in the background, hiding IO behind compute
-    (the paper's "breaking through the IO wall"). A shared work queue
-    gives automatic work-stealing across reader threads: a slow shard
-    (straggler) never blocks the batch queue, it just contributes fewer
-    row groups per unit time.
+    (the paper's "breaking through the IO wall"). Each reader thread owns
+    a set of parts (`shard_map`) and drains its own work deque; an idle
+    reader steals from the back of the longest peer deque, so a slow
+    shard (straggler) never blocks the batch queue — it just contributes
+    fewer row groups per unit time.
+  * the reader pool is *elastic* (DESIGN.md §10): `add_reader` /
+    `remove_reader` / `reassign_shard` let a closed-loop controller
+    (`io/autoscale.py`) grow, shrink and rebalance the pool at step edges
+    without dropping queued batches or in-flight row groups.
 
 File format (one part):
   [8B magic "RECISCOL"][4B u32 header_len][header JSON]
@@ -26,6 +31,7 @@ File format (one part):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import pathlib
@@ -193,6 +199,26 @@ class BatchSpec:
     nnz_budget: Mapping[str, int]   # per column
 
 
+_EWMA_ALPHA = 0.3      # per-reader / per-part service-time smoothing
+_IDLE_SLEEP_S = 0.002  # reader poll interval when its deque (and peers') drain
+
+
+class _Reader:
+    """One prefetch thread: its work deque, service-time EWMA and controls."""
+
+    __slots__ = ("rid", "deque", "stop", "thread", "ewma_s", "groups_read",
+                 "hist")
+
+    def __init__(self, rid: int, hist):
+        self.rid = rid
+        self.deque: collections.deque = collections.deque()
+        self.stop = threading.Event()
+        self.thread: threading.Thread | None = None
+        self.ewma_s: float | None = None   # EWMA read+decompress s/group
+        self.groups_read = 0
+        self.hist = hist                   # io/read_group_s/reader<rid>
+
+
 class AsyncLoader:
     """Multi-threaded prefetching loader over a sharded table directory.
 
@@ -201,10 +227,16 @@ class AsyncLoader:
 
     Reports into an ``obs.MetricsRegistry`` (default: process-wide) under
     the ``io/`` namespace: row groups read, batches assembled, rows,
-    overflow ids, per-group read+decompress time, and prefetch-queue depth
-    (the gauge that tells you whether IO is hiding behind compute — a
-    persistently empty queue means the Trainer's ``data_wait`` phase is
-    about to show up in the straggler watchdog).
+    overflow ids, per-group read+decompress time (aggregate and per-reader
+    via label suffixes), reader-pool size, and prefetch-queue depth — the
+    gauge that tells you whether IO is hiding behind compute. Depth is
+    sampled on every put AND every get, so a drained-then-idle queue reads
+    0, not the last producer-side value.
+
+    The reader pool is elastic: ``add_reader`` / ``remove_reader`` /
+    ``reassign_shard`` are the actuators of the pipeline autoscaler
+    (io/autoscale.py), and ``signals()`` is its sensor snapshot. All three
+    preserve queued batches and in-flight row groups.
     """
 
     def __init__(self, table_dir: str | pathlib.Path, spec: BatchSpec,
@@ -221,53 +253,231 @@ class AsyncLoader:
         self.loop = loop
         self.overflow = 0
         self.rows_seen = 0
-        reg = registry if registry is not None else obs.get_registry()
+        self._reg = registry if registry is not None else obs.get_registry()
+        reg = self._reg
         self._c_groups = reg.counter("io/row_groups_read")
         self._c_batches = reg.counter("io/batches_assembled")
         self._c_rows = reg.counter("io/rows")
         self._c_overflow = reg.counter("io/overflow_ids")
         self._h_read = reg.histogram("io/read_group_s")
         self._g_depth = reg.gauge("io/queue_depth")
+        self._g_readers = reg.gauge("io/readers")
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
-        self._work: queue.Queue = queue.Queue()
         self._stop = threading.Event()
+        self._lock = threading.Lock()          # readers / shard_map / EWMAs
         self._cursor_lock = threading.Lock()
         self.cursor = {"part": start_part, "group": start_group}  # checkpointable
+        self.shard_map: dict[int, int] = {}    # part index → owning reader id
+        self.part_ewma: dict[int, float] = {}  # part index → EWMA s/group
+        self._readers: dict[int, _Reader] = {}
+        self._next_rid = 0
+        self._live = 0          # threads still running (incl. removed ones)
+        self._unfinished = 0    # non-loop: enqueued row groups not yet done
+        work: list[tuple[int, int]] = []
         for pi, p in enumerate(self.parts):
             r = ColumnReader(p, columns)
             for gi in range(r.n_groups):
                 if pi < start_part or (pi == start_part and gi < start_group):
                     continue
-                self._work.put((pi, gi))
-        self._threads = [
-            threading.Thread(target=self._worker, daemon=True) for _ in range(n_threads)
-        ]
-        for t in self._threads:
-            t.start()
+                work.append((pi, gi))
+        self._unfinished = len(work)
+        with self._lock:
+            rids = [self._new_reader_locked() for _ in range(max(n_threads, 1))]
+            for i in range(len(self.parts)):
+                self.shard_map[i] = rids[i % len(rids)]
+            for item in work:
+                self._readers[self.shard_map[item[0]]].deque.append(item)
+            for rid in rids:
+                self._spawn_locked(self._readers[rid])
 
-    def _worker(self):
-        readers = {}
-        while not self._stop.is_set():
-            try:
-                pi, gi = self._work.get(timeout=0.1)
-            except queue.Empty:
-                if self.loop:
+    # ----------------------------------------------------- reader pool ops
+    def _new_reader_locked(self) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        hist = self._reg.histogram("io/read_group_s", reader=rid)
+        self._readers[rid] = _Reader(rid, hist)
+        self._g_readers.set(len(self._readers))
+        return rid
+
+    def _spawn_locked(self, r: _Reader):
+        r.thread = threading.Thread(target=self._worker, args=(r,), daemon=True)
+        self._live += 1
+        r.thread.start()
+
+    @property
+    def n_readers(self) -> int:
+        with self._lock:
+            return len(self._readers)
+
+    def add_reader(self) -> int:
+        """Grow the pool by one thread; pulls a fair share of shards (and
+        their queued work) from the most-loaded owners so the new reader
+        owns work immediately instead of only stealing."""
+        with self._lock:
+            rid = self._new_reader_locked()
+            r = self._readers[rid]
+            share = max(1, len(self.parts) // len(self._readers))
+            while True:
+                owned = len([p for p, o in self.shard_map.items() if o == rid])
+                if owned >= share:
+                    break
+                counts: dict[int, int] = {}
+                for p, o in self.shard_map.items():
+                    counts[o] = counts.get(o, 0) + 1
+                donors = [(n, o) for o, n in counts.items()
+                          if o != rid and n > 1 and o in self._readers]
+                if not donors:
+                    break
+                _, donor = max(donors)
+                give = max(p for p, o in self.shard_map.items() if o == donor)
+                self._reassign_locked(give, rid)
+            self._spawn_locked(r)
+        return rid
+
+    def remove_reader(self, rid: int | None = None) -> int | None:
+        """Shrink the pool by one thread (default: the newest). Its shards
+        and queued work move to the least-loaded survivors; its in-flight
+        row group completes and is re-enqueued (loop mode) before the
+        thread exits. Returns the removed rid, or None if only one reader
+        remains (the pool never empties)."""
+        with self._lock:
+            live = sorted(self._readers)
+            if len(live) <= 1:
+                return None
+            if rid is None or rid not in self._readers:
+                rid = live[-1]
+            r = self._readers.pop(rid)
+            self._g_readers.set(len(self._readers))
+            survivors = sorted(self._readers)
+            counts = {s: 0 for s in survivors}
+            for p, o in self.shard_map.items():
+                if o in counts:
+                    counts[o] += 1
+            for p in sorted(p for p, o in self.shard_map.items() if o == rid):
+                dst = min(survivors, key=lambda s: (counts[s], s))
+                self.shard_map[p] = dst
+                counts[dst] += 1
+            # park its queued work with the new owners (nothing is dropped)
+            while r.deque:
+                pi, gi = r.deque.popleft()
+                dst = self.shard_map.get(pi)
+                tgt = self._readers.get(dst) if dst is not None else None
+                (tgt or self._readers[survivors[0]]).deque.append((pi, gi))
+            r.stop.set()
+        return rid
+
+    def reassign_shard(self, part: int, dst_rid: int) -> bool:
+        """Move ownership of ``part`` (and its queued row groups) to reader
+        ``dst_rid`` — the controller's explicit work-stealing action."""
+        with self._lock:
+            if dst_rid not in self._readers or not (0 <= part < len(self.parts)):
+                return False
+            self._reassign_locked(part, dst_rid)
+        return True
+
+    def _reassign_locked(self, part: int, dst_rid: int):
+        src = self.shard_map.get(part)
+        self.shard_map[part] = dst_rid
+        sr = self._readers.get(src) if src is not None else None
+        if sr is not None and src != dst_rid:
+            moved = [it for it in sr.deque if it[0] == part]
+            if moved:
+                kept = [it for it in sr.deque if it[0] != part]
+                sr.deque.clear()
+                sr.deque.extend(kept)
+                self._readers[dst_rid].deque.extend(moved)
+
+    def signals(self) -> dict:
+        """Controller-facing snapshot (io/autoscale.py Signals fields)."""
+        with self._lock:
+            shards: dict[int, list[int]] = {rid: [] for rid in self._readers}
+            for pi, rid in sorted(self.shard_map.items()):
+                if rid in shards:
+                    shards[rid].append(pi)
+            return {
+                "n_readers": len(self._readers),
+                "queue_depth": self._q.qsize(),
+                "queue_capacity": self._q.maxsize,
+                "reader_service_ewma_s": {
+                    rid: r.ewma_s for rid, r in self._readers.items()
+                    if r.ewma_s is not None},
+                "reader_shards": {rid: tuple(s) for rid, s in shards.items()},
+                "part_service_ewma_s": dict(self.part_ewma),
+            }
+
+    # ------------------------------------------------------------- workers
+    def _take_work(self, r: _Reader):
+        with self._lock:
+            if r.deque:
+                return r.deque.popleft()
+            victim = max(
+                (p for p in self._readers.values() if p is not r and p.deque),
+                key=lambda p: len(p.deque), default=None)
+            if victim is not None:
+                return victim.deque.pop()  # steal from the back
+            return None
+
+    def _note_service(self, r: _Reader, pi: int, dt: float):
+        self._h_read.observe(dt)
+        r.hist.observe(dt)
+        a = _EWMA_ALPHA
+        with self._lock:
+            r.ewma_s = dt if r.ewma_s is None else (1 - a) * r.ewma_s + a * dt
+            prev = self.part_ewma.get(pi)
+            self.part_ewma[pi] = dt if prev is None else (1 - a) * prev + a * dt
+            r.groups_read += 1
+
+    def _worker(self, r: _Reader):
+        col_readers: dict[int, ColumnReader] = {}
+        try:
+            while not (self._stop.is_set() or r.stop.is_set()):
+                item = self._take_work(r)
+                if item is None:
+                    with self._lock:
+                        drained = self._unfinished == 0
+                    if drained and not self.loop:
+                        break
+                    time.sleep(_IDLE_SLEEP_S)
                     continue
-                self._q.put(None)
-                return
-            if pi not in readers:
-                readers[pi] = ColumnReader(self.parts[pi], self.columns)
-            t0 = time.perf_counter()
-            cols = readers[pi].read_group(gi)
-            self._h_read.observe(time.perf_counter() - t0)
-            self._c_groups.inc()
-            for batch in self._assemble(cols):
-                self._q.put(batch)
-                self._g_depth.set(self._q.qsize())
-            with self._cursor_lock:
-                self.cursor = {"part": pi, "group": gi + 1}
-            if self.loop:
-                self._work.put((pi, gi))
+                pi, gi = item
+                if pi not in col_readers:
+                    col_readers[pi] = ColumnReader(self.parts[pi], self.columns)
+                t0 = time.perf_counter()
+                cols = col_readers[pi].read_group(gi)
+                self._note_service(r, pi, time.perf_counter() - t0)
+                self._c_groups.inc()
+                for batch in self._assemble(cols):
+                    self._q.put(batch)
+                    self._g_depth.set(self._q.qsize())
+                with self._cursor_lock:
+                    self.cursor = {"part": pi, "group": gi + 1}
+                with self._lock:
+                    if self.loop:  # re-enqueue with the CURRENT owner
+                        owner = self._readers.get(self.shard_map.get(pi, r.rid))
+                        (owner if owner is not None else r).deque.append((pi, gi))
+                    else:
+                        self._unfinished -= 1
+        finally:
+            self._retire(r)
+
+    def _retire(self, r: _Reader):
+        with self._lock:
+            self._readers.pop(r.rid, None)
+            self._g_readers.set(len(self._readers))
+            leftovers = list(r.deque)
+            r.deque.clear()
+            live = sorted(self._readers)
+            for pi, gi in leftovers:  # defensive: never drop queued work
+                dst = self.shard_map.get(pi)
+                tgt = self._readers.get(dst) if dst is not None else None
+                if tgt is None and live:
+                    tgt = self._readers[live[0]]
+                if tgt is not None:
+                    tgt.deque.append((pi, gi))
+            self._live -= 1
+            last = self._live == 0
+        if last and not self.loop and not self._stop.is_set():
+            self._q.put(None)  # single end-of-data sentinel
 
     def _assemble(self, cols) -> Iterator[dict]:
         any_col = next(iter(cols.values()))
@@ -302,14 +512,11 @@ class AsyncLoader:
             yield batch
 
     def __iter__(self):
-        done = 0
         while True:
             item = self._q.get()
+            self._g_depth.set(self._q.qsize())  # consumer-side depth sample
             if item is None:
-                done += 1
-                if done >= len(self._threads):
-                    return
-                continue
+                return
             yield item
 
     def stop(self):

@@ -7,10 +7,17 @@ devices — the full configs are exercised via ``dryrun.py``.
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch dlrm-mlperf \
       --steps 100 --batch 256 --ckpt-dir /tmp/ckpt [--resume]
+
+With ``--data-dir`` (recsys archs, single-device smoke mesh) batches
+stream from a ColumnIO table through an AsyncLoader instead of the
+synthetic generator; ``--autoscale`` then closes the loop with a
+``PipelineController`` (DESIGN.md §10) that resizes the reader pool and
+rebalances shards from the registry's step-edge signals.
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
 
 import jax
@@ -64,7 +71,29 @@ def main(argv=None) -> int:
                    help="print a registry report every N steps")
     p.add_argument("--profile-spans", action="store_true",
                    help="bridge step-phase spans to jax.profiler")
+    # ColumnIO data path + pipeline autoscaler (DESIGN.md §10)
+    p.add_argument("--data-dir", default=None, metavar="DIR",
+                   help="stream batches from a ColumnIO table (synthesized "
+                        "there on first use; recsys archs only)")
+    p.add_argument("--data-rows", type=int, default=8192,
+                   help="rows to synthesize when --data-dir is empty")
+    p.add_argument("--data-parts", type=int, default=4,
+                   help="part files when synthesizing the table")
+    p.add_argument("--io-threads", type=int, default=2,
+                   help="initial AsyncLoader reader threads")
+    p.add_argument("--prefetch", type=int, default=8,
+                   help="AsyncLoader prefetch-queue capacity")
+    p.add_argument("--autoscale", action="store_true",
+                   help="closed-loop reader-pool autoscaler (needs --data-dir)")
+    p.add_argument("--autoscale-min", type=int, default=1,
+                   help="reader-pool floor")
+    p.add_argument("--autoscale-max", type=int, default=8,
+                   help="reader-pool ceiling")
     args = p.parse_args(argv)
+
+    if args.autoscale and not args.data_dir:
+        p.error("--autoscale requires --data-dir (nothing to scale without "
+                "an AsyncLoader)")
 
     mesh = small_mesh()
     arch = get_config(args.arch, smoke=True)
@@ -73,13 +102,44 @@ def main(argv=None) -> int:
     cell = build_cell(args.arch, shape.name, mesh, opts, smoke=True,
                       shape_override=shape)
 
+    loader = controller = None
+    if args.data_dir:
+        if arch.family != "recsys":
+            p.error("--data-dir is a recsys-family data path")
+        if np.array(jax.devices()).size != 1:
+            p.error("--data-dir streaming needs a single-device smoke mesh")
+        from repro.io import datagen
+        from repro.io.columnio import AsyncLoader, BatchSpec
+        from repro.launch.recsys_cell import _ids_per_row, _model_mod
+
+        table = pathlib.Path(args.data_dir)
+        model_specs = _model_mod(args.arch).feature_specs(arch.model)
+        if not any(table.glob("part-*.col")):
+            gens = datagen.gen_for_specs(model_specs, seq_mean_len=4.0)
+            datagen.write_table(table, gens, n_rows=args.data_rows,
+                                rows_per_group=256, n_parts=args.data_parts)
+            print(f"synthesized table: {table} ({args.data_rows} rows, "
+                  f"{args.data_parts} parts)")
+        # budgets must equal the cell's static jit shapes exactly: the
+        # loader pads every column to its budget (batch * ids-per-row)
+        bspec = BatchSpec(batch_rows=args.batch,
+                          nnz_budget={s.name: args.batch * _ids_per_row(s)
+                                      for s in model_specs})
+        loader = AsyncLoader(table, bspec, n_threads=args.io_threads,
+                             prefetch=args.prefetch, loop=True)
+        if args.autoscale:
+            from repro.io.autoscale import AutoscaleConfig, PipelineController
+            controller = PipelineController(
+                loader, AutoscaleConfig(min_readers=args.autoscale_min,
+                                        max_readers=args.autoscale_max))
+
     tcfg = TrainConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                        ckpt_every=args.ckpt_every, resume=args.resume,
                        log_every=args.log_every,
                        telemetry_path=args.telemetry,
                        console_every=args.console_every,
                        profile_spans=args.profile_spans)
-    trainer = Trainer(cell, tcfg)
+    trainer = Trainer(cell, tcfg, controller=controller)
 
     with mesh:
         state = cell.init_state()
@@ -93,9 +153,13 @@ def main(argv=None) -> int:
                 yield cell.make_batch(s)
                 s += 1
 
-        res = trainer.run(state, batches(), start_step=start,
-                          cursor_fn=lambda: {"part": 0, "group": 0},
-                          install_signals=True)
+        stream = iter(loader) if loader is not None else batches()
+        cursor_fn = ((lambda: loader.cursor) if loader is not None
+                     else (lambda: {"part": 0, "group": 0}))
+        res = trainer.run(state, stream, start_step=start,
+                          cursor_fn=cursor_fn, install_signals=True)
+    if loader is not None:
+        loader.stop()
     for m in res.metrics_history[-5:]:
         print({k: round(v, 5) if isinstance(v, float) else v for k, v in m.items()})
     print(f"ran {res.steps_run} steps"
@@ -114,6 +178,11 @@ def main(argv=None) -> int:
             s = snap[name]
             print(f"{name:28s} p50={s['p50']*1e3:8.3f}ms "
                   f"p99={s['p99']*1e3:8.3f}ms total={s['sum']:.3f}s")
+    if controller is not None:
+        print(f"autoscale: {len(controller.actions_log)} actions, "
+              f"final readers={loader.n_readers}")
+        for s, act in controller.actions_log:
+            print(f"  step {s}: {act}")
     if args.telemetry:
         print(f"telemetry trace: {args.telemetry}")
     return 0

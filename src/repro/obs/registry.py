@@ -50,6 +50,19 @@ def sanitize(fragment: str) -> str:
     return s or "x"
 
 
+def label(name: str, **labels) -> str:
+    """Cheap label support: append one ``<key><value>`` segment per label,
+    sorted by key — ``label("storage/hits", shard=3)`` → ``storage/hits/
+    shard3``. Labels are just name suffixes: no cardinality tracking, no
+    per-series dict — a labelled series is an ordinary registry entry, so
+    per-shard / per-reader counters cost exactly one instrument each
+    (the ROADMAP's "cheap label support" requirement)."""
+    for k in sorted(labels):
+        seg = f"{sanitize(k)}{sanitize(labels[k]) if not isinstance(labels[k], int) else labels[k]}"
+        name = f"{name}/{seg}"
+    return check_name(name)
+
+
 class Counter:
     kind = "counter"
     __slots__ = ("name", "_v", "_lock")
@@ -218,15 +231,17 @@ class MetricsRegistry:
                     f"requested {cls.kind}")
             return m
 
-    def counter(self, name: str) -> Counter:
-        return self._get(name, Counter)
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(label(name, **labels) if labels else name, Counter)
 
-    def gauge(self, name: str) -> Gauge:
-        return self._get(name, Gauge)
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(label(name, **labels) if labels else name, Gauge)
 
     def histogram(self, name: str,
-                  quantiles: tuple[float, ...] = (0.5, 0.95, 0.99)) -> Histogram:
-        return self._get(name, Histogram, quantiles)
+                  quantiles: tuple[float, ...] = (0.5, 0.95, 0.99),
+                  **labels) -> Histogram:
+        return self._get(label(name, **labels) if labels else name,
+                         Histogram, quantiles)
 
     def get(self, name: str):
         return self._metrics.get(name)

@@ -10,6 +10,7 @@ The train loop's wall-time decomposes into a fixed phase taxonomy:
     checkpoint   saver hand-off / final blocking save
     eval         interleaved eval passes
     evict        staleness eviction windows
+    autoscale    pipeline-controller decision + actuation (io/autoscale)
 
 ``Tracer.step(n)`` opens a per-step timeline; ``Tracer.span(name)`` timed
 blocks inside it accumulate into that step's record, which is emitted as
@@ -33,7 +34,7 @@ from repro.obs.registry import MetricsRegistry, check_name
 from repro.obs.telemetry import TelemetryWriter
 
 PHASES = ("data_wait", "pre_step", "device_step", "post_step",
-          "checkpoint", "eval", "evict")
+          "checkpoint", "eval", "evict", "autoscale")
 
 
 class StepTrace:

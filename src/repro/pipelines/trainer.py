@@ -192,7 +192,8 @@ class Trainer:
     def __init__(self, cell, cfg: TrainConfig,
                  evict_fn: Callable[[Any, int], Any] | None = None,
                  hooks: Any | None = None,
-                 registry: obs.MetricsRegistry | None = None):
+                 registry: obs.MetricsRegistry | None = None,
+                 controller: Any | None = None):
         self.cell = cell
         self.cfg = cfg
         self.evict_fn = evict_fn
@@ -201,6 +202,10 @@ class Trainer:
         # embedding store moves rows host↔device (spill/fill, DESIGN.md §3)
         # and where its state joins the checkpoint (ckpt_extra/on_restore).
         self.hooks = hooks
+        # Pipeline autoscaler (io.autoscale.PipelineController): called at
+        # each step edge with the step's span timeline so it can react to
+        # this step's data_wait, not a lagging aggregate (DESIGN.md §10).
+        self.controller = controller
         donate = (0,) if (cell.donate_state and cell.returns_state) else ()
         self._jit_step = jax.jit(cell.step_fn, donate_argnums=donate)
         self.registry = registry if registry is not None else obs.get_registry()
@@ -334,6 +339,10 @@ class Trainer:
                     interval = {}
                     m.update(step=step, wall_s=dt, straggler=bool(slow))
                     history.append(m)
+
+                if self.controller is not None:
+                    with self.tracer.span("autoscale"):
+                        self.controller.on_step(step, st.spans)
 
                 if (cfg.evict_every and self.evict_fn
                         and step % cfg.evict_every == 0):

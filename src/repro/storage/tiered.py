@@ -139,8 +139,13 @@ class TieredEmbeddingStore:
         # obs wiring (DESIGN.md §9): counters/gauges under the unified
         # ``storage/`` namespace, shared with the Trainer's registry
         reg = registry if registry is not None else obs.get_registry()
+        self._reg = reg
         self._obs_counters = {k: reg.counter(f"storage/{k}")
                               for k in _COUNTERS}
+        # per-shard series (storage/<k>/shard<d>, obs.label) are created
+        # lazily on first increment — a hot shard shows up as one counter
+        # pulling ahead of its peers, without D× instruments up front
+        self._shard_counters: dict[tuple[str, int], obs.Counter] = {}
         self._g_host = reg.gauge("storage/host_rows")
         self._g_device = reg.gauge("storage/device_rows")
         self._g_hit = reg.gauge("storage/hit_rate")
@@ -158,6 +163,18 @@ class TieredEmbeddingStore:
     def host_rows(self, g: str | None = None) -> int:
         keys = [g] if g else list(self.host)
         return sum(self.host[k].n_rows for k in keys)
+
+    def _bump(self, met: dict, key: str, d: int, n: int):
+        """Count an event against both the step-metric dict and the shard's
+        labelled counter (ROADMAP: per-shard visibility for hot shards)."""
+        met[key] += n
+        if not n:
+            return
+        c = self._shard_counters.get((key, d))
+        if c is None:
+            c = self._reg.counter(f"storage/{key}", shard=d)
+            self._shard_counters[(key, d)] = c
+        c.inc(n)
 
     def _metrics(self, step_counts: dict, keys: tuple[str, ...]) -> dict:
         """Fold counters into lifetime totals; report only this pass's
@@ -254,8 +271,8 @@ class TieredEmbeddingStore:
                 in_res = np.fromiter((int(i) in res for i in sids), np.bool_,
                                      sids.size)
                 miss = sids[~in_res]
-                met["lookups"] += int(sids.size)
-                met["hits"] += int(sids.size - miss.size)
+                self._bump(met, "lookups", d, int(sids.size))
+                self._bump(met, "hits", d, int(sids.size - miss.size))
                 sv = _ShardView(state_g, d)
                 placeable = miss
                 if miss.size:
@@ -275,19 +292,21 @@ class TieredEmbeddingStore:
                                 np.int64, cand.size)
                             victims = self.policy.select_victims(
                                 cand, lu, cnt, k)
-                            met["demoted"] += self._demote(g, sv, victims, res)
+                            self._bump(met, "demoted", d,
+                                       self._demote(g, sv, victims, res))
                         free = cap - len(res)
                         if miss.size > free:  # every victim was protected
-                            met["unplaceable"] += int(miss.size - free)
+                            self._bump(met, "unplaceable", d,
+                                       int(miss.size - free))
                             placeable = miss[:free]
                     promo = placeable[self.host[g].contains(placeable)]
-                    met["fresh"] += int(placeable.size - promo.size)
+                    self._bump(met, "fresh", d, int(placeable.size - promo.size))
                     if promo.size:
                         landed = self._promote(g, sv, promo, step)
-                        met["promoted"] += int(landed.size)
+                        self._bump(met, "promoted", d, int(landed.size))
                         stranded = np.setdiff1d(promo, landed)
                         if stranded.size:  # probe exhaustion: stayed on host
-                            met["unplaceable"] += int(stranded.size)
+                            self._bump(met, "unplaceable", d, int(stranded.size))
                             placeable = placeable[
                                 ~np.isin(placeable, stranded)]
                     self._pending[g][d].extend(int(i) for i in placeable)
@@ -323,7 +342,7 @@ class TieredEmbeddingStore:
                 if rejected.size:
                     sv = _ShardView(state_g, d)
                     n = self._demote(g, sv, rejected, self.resident[g][d])
-                    met["admission_demoted"] += n
+                    self._bump(met, "admission_demoted", d, n)
                     state_g = sv.flush()
             new_state[g] = state_g
         return new_state, self._metrics(met, ("admission_demoted",))
@@ -342,7 +361,8 @@ class TieredEmbeddingStore:
                 if not stale.size:
                     continue
                 sv = _ShardView(state_g, d)
-                met["spilled_stale"] += self._demote(g, sv, stale, res)
+                self._bump(met, "spilled_stale", d,
+                           self._demote(g, sv, stale, res))
                 state_g = sv.flush()
             new_state[g] = state_g
         return new_state, self._metrics(met, ("spilled_stale",))

@@ -44,6 +44,23 @@ class TestColumnIO:
             assert b["ids"].nnz_budget == 48
         assert loader.overflow >= 0  # counted, not crashed
 
+    def test_queue_depth_sampled_on_get(self, tmp_path, rng):
+        # regression: the io/queue_depth gauge was only set on put, so a
+        # drained queue kept reporting the last producer-side value and the
+        # autoscaler saw a "full" queue on an idle pipeline
+        from repro import obs
+
+        gens = [ColumnGen("ids", kind="zipf")]
+        write_table(tmp_path / "tbl", gens, n_rows=256, rows_per_group=64)
+        spec = BatchSpec(batch_rows=64, nnz_budget={"ids": 64})
+        reg = obs.MetricsRegistry()
+        loader = AsyncLoader(tmp_path / "tbl", spec, n_threads=1,
+                             registry=reg)
+        assert sum(1 for _ in loader) == 4
+        # fully drained (sentinel included): the consumer-side sample must
+        # have pulled the gauge back to 0
+        assert reg.get("io/queue_depth").value == 0.0
+
     def test_sharded_readers_disjoint(self, tmp_path, rng):
         gens = [ColumnGen("ids", kind="zipf")]
         write_table(tmp_path / "tbl", gens, n_rows=256, rows_per_group=64,

@@ -409,3 +409,69 @@ class TestUnifiedNamespace:
             "roofline/wide_deep/train_batch/cpu_1/compute_s").value == 0.1
         for n in reg.names():
             assert obs.NAME_RE.match(n), n
+
+
+# ---------------------------------------------------------------------------
+# label support + per-shard storage series (DESIGN.md §9/§10)
+# ---------------------------------------------------------------------------
+
+class TestLabels:
+    def test_label_appends_sorted_key_value_segments(self):
+        assert obs.label("storage/hits", shard=3) == "storage/hits/shard3"
+        # keys are sorted, so label order never forks the series name
+        assert (obs.label("io/read_group_s", reader=1, part=2)
+                == obs.label("io/read_group_s", part=2, reader=1)
+                == "io/read_group_s/part2/reader1")
+
+    def test_label_sanitizes_string_values(self):
+        assert obs.label("trainer/steps", host="node-1") \
+            == "trainer/steps/hostnode_1"
+
+    def test_label_result_must_lint(self):
+        with pytest.raises(ValueError):
+            obs.label("storage/hits", **{"9bad": "x"})
+
+    def test_labelled_instruments_are_plain_registry_entries(self):
+        reg = obs.MetricsRegistry()
+        c = reg.counter("storage/hits", shard=2)
+        c.inc(5)
+        assert reg.get("storage/hits/shard2").value == 5.0
+        assert reg.counter("storage/hits").value == 0.0  # distinct series
+        for n in reg.names():
+            assert obs.NAME_RE.match(n), n
+
+    def test_tiered_store_emits_per_shard_counters(self):
+        """The store's lookup/hit/promote traffic lands on per-shard
+        ``storage/<k>/shard<d>`` series next to the aggregates, so a hot
+        shard is visible as one counter pulling ahead of its peers."""
+        from repro.core.embedding_engine import EmbeddingEngine, EngineConfig
+        from repro.core.feature_engine import FeatureSpec
+        from repro.io.ragged import Ragged
+        from repro.storage import StorageConfig
+
+        reg = obs.set_registry(obs.MetricsRegistry())
+        try:
+            specs = [FeatureSpec("f", transform="hash", emb_dim=4,
+                                 pooling="sum")]
+            eng = EmbeddingEngine(specs, EngineConfig(
+                mesh_axes=(), n_devices=2, rows_per_shard=16,
+                map_capacity_per_shard=128, u_budget=16, per_dest_cap=16,
+                recv_budget=16, storage=StorageConfig(policy="lru")))
+            state = eng.init_state()
+            # same ids every step: step 0 is all misses, later steps all
+            # hits — both series must appear on both shards
+            ids = Ragged.from_lists([[7 * j + 1 for j in range(10)]],
+                                    nnz_budget=16)
+            for step in range(3):
+                state, _ = eng.storage_prefetch(state, {"f": ids}, step)
+            flat = reg.flat()
+            shard_lookups = [flat.get(f"storage/lookups/shard{d}", 0.0)
+                             for d in range(2)]
+            # per-shard series exist, are non-trivial, and partition the
+            # aggregate exactly (nothing double- or under-counted)
+            assert all(v > 0 for v in shard_lookups)
+            assert sum(shard_lookups) == flat["storage/lookups"]
+            assert (flat["storage/hits/shard0"] + flat["storage/hits/shard1"]
+                    == flat["storage/hits"])
+        finally:
+            obs.set_registry(obs.MetricsRegistry())

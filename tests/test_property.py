@@ -1,0 +1,168 @@
+"""Property-based invariants for the sparse core (idmap + blocks).
+
+Runs under hypothesis when the package is installed (``hypothesis_compat``
+turns the ``@given`` tests into skips otherwise); the same property
+checkers are ALSO driven by seeded numpy examples so the invariants are
+exercised on every environment, not just where hypothesis exists.
+
+Properties:
+
+  * ``idmap.remove`` → ``lookup_or_insert`` round-trip — removed ids
+    re-insert as new, recycling exactly the freed rows (LIFO from the
+    free stack, so ``next_row`` never grows back); survivors keep their
+    original offsets; row 0 (OVERFLOW_ROW) never enters the free stack.
+  * ``blocks.write_rows`` → ``gather_with_slots`` slot-consistency —
+    masked rows round-trip embedding AND every optimizer slot together;
+    unmasked rows are untouched; ``clear_rows`` zeroes exactly the
+    masked rows.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import blocks as blocks_lib, idmap as idmap_lib
+from repro.core.idmap import OVERFLOW_ROW, PAD
+
+
+# ---------------------------------------------------------------------------
+# property checkers (pure asserts — shared by hypothesis and seeded paths)
+# ---------------------------------------------------------------------------
+
+def check_remove_reinsert_roundtrip(ids: np.ndarray, n_remove: int):
+    """ids: unique non-negative int64; remove the first n_remove, re-insert."""
+    n = len(ids)
+    cap, n_rows = 4 * n, 2 * n + 1  # roomy: no probe/row exhaustion noise
+    m = idmap_lib.create(cap, n_rows)
+    jids = jnp.asarray(ids, jnp.int64)
+    m, off0, is_new0, _ = idmap_lib.lookup_or_insert(m, jids, jnp.int32(0))
+    off0 = np.asarray(off0)
+    assert bool(np.all(np.asarray(is_new0)))
+    assert bool(np.all(off0 != OVERFLOW_ROW))      # row 0 stays reserved
+    assert len(np.unique(off0)) == n               # conflict-free rows
+    next_row0 = int(m.next_row)
+
+    rm = jnp.asarray(ids[:n_remove], jnp.int64)
+    m, rm_off, freeable = idmap_lib.remove(m, rm)
+    rm_off, freeable = np.asarray(rm_off), np.asarray(freeable)
+    assert bool(np.all(freeable))                  # all were present
+    np.testing.assert_array_equal(rm_off, off0[:n_remove])
+    assert int(m.free_size) == n_remove
+    # the free stack holds exactly the freed rows, in push order
+    np.testing.assert_array_equal(
+        np.asarray(m.free_stack)[:n_remove], rm_off)
+
+    # removed ids are gone; survivors still resolve to their original rows
+    assert bool(np.all(np.asarray(idmap_lib.lookup(m, rm)) == OVERFLOW_ROW))
+    if n_remove < n:
+        keep = jnp.asarray(ids[n_remove:], jnp.int64)
+        np.testing.assert_array_equal(
+            np.asarray(idmap_lib.lookup(m, keep)), off0[n_remove:])
+
+    m, off1, is_new1, _ = idmap_lib.lookup_or_insert(m, rm, jnp.int32(1))
+    off1 = np.asarray(off1)
+    assert bool(np.all(np.asarray(is_new1)))       # re-insert is a fresh row
+    # rows are RECYCLED: the same set of offsets comes back (LIFO — the
+    # i-th re-insert pops stack top), and the bump allocator never moved
+    assert set(off1.tolist()) == set(rm_off.tolist())
+    np.testing.assert_array_equal(off1, rm_off[::-1])
+    assert int(m.next_row) == next_row0            # no leaked rows
+    assert int(m.free_size) == 0
+    # full map still conflict-free after the churn
+    all_off = np.asarray(idmap_lib.lookup(m, jids))
+    assert len(np.unique(all_off)) == n
+    assert bool(np.all(all_off != OVERFLOW_ROW))
+
+
+def check_write_gather_slot_consistency(seed: int, n_rows: int, dim: int,
+                                        n_write: int):
+    r = np.random.default_rng(seed)
+    b = blocks_lib.create(n_rows, dim, slot_names=("m", "v"))
+    # unique target rows ≥ 1 (row 0 is the reserved overflow bucket)
+    offs = jnp.asarray(
+        r.choice(np.arange(1, n_rows), size=n_write, replace=False).astype(
+            np.int32))
+    emb = jnp.asarray(r.normal(size=(n_write, dim)).astype(np.float32))
+    slots = {k: jnp.asarray(r.normal(size=(n_write, dim)).astype(np.float32))
+             for k in ("m", "v")}
+    mask = jnp.asarray(r.integers(0, 2, size=n_write).astype(bool))
+    before_emb, before_slots = blocks_lib.gather_with_slots(b, offs)
+
+    b = blocks_lib.write_rows(b, offs, emb, slots, mask)
+    got_emb, got_slots = blocks_lib.gather_with_slots(b, offs)
+    mk = np.asarray(mask)[:, None]
+    # masked rows carry the payload — embedding and BOTH slots together
+    np.testing.assert_array_equal(
+        np.asarray(got_emb), np.where(mk, np.asarray(emb),
+                                      np.asarray(before_emb)))
+    for k in ("m", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(got_slots[k]), np.where(mk, np.asarray(slots[k]),
+                                               np.asarray(before_slots[k])))
+
+    # clear_rows zeroes exactly the masked rows (emb + slots move together)
+    b = blocks_lib.clear_rows(b, offs, mask)
+    got_emb, got_slots = blocks_lib.gather_with_slots(b, offs)
+    np.testing.assert_array_equal(
+        np.asarray(got_emb), np.where(mk, 0.0, np.asarray(before_emb)))
+    for k in ("m", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(got_slots[k]), np.where(mk, 0.0,
+                                               np.asarray(before_slots[k])))
+
+
+# ---------------------------------------------------------------------------
+# seeded example drive (runs everywhere, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+class TestSeededExamples:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_idmap_remove_reinsert(self, seed):
+        r = np.random.default_rng(seed)
+        n = int(r.integers(2, 48))
+        ids = r.choice(1 << 40, size=n, replace=False).astype(np.int64)
+        check_remove_reinsert_roundtrip(ids, int(r.integers(1, n + 1)))
+
+    def test_idmap_remove_all_then_reinsert_all(self):
+        ids = np.arange(1, 33, dtype=np.int64) * 7919
+        check_remove_reinsert_roundtrip(ids, 32)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_blocks_slot_consistency(self, seed):
+        r = np.random.default_rng(100 + seed)
+        n_rows = int(r.integers(8, 64))
+        check_write_gather_slot_consistency(
+            seed, n_rows, dim=int(r.integers(1, 9)),
+            n_write=int(r.integers(1, n_rows)))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drive (skipped cleanly when the package is absent)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _ids_strategy = st.lists(
+        st.integers(min_value=0, max_value=(1 << 62) - 1),
+        min_size=2, max_size=64, unique=True)
+else:  # the stub's strategies are inert; @given skips the test anyway
+    _ids_strategy = None
+
+
+class TestHypothesis:
+    @given(ids=_ids_strategy, frac=st.floats(min_value=0.01, max_value=1.0))
+    @settings(max_examples=50, deadline=None)
+    def test_idmap_remove_reinsert(self, ids, frac):
+        arr = np.asarray(ids, dtype=np.int64)
+        n_remove = max(1, int(round(frac * len(arr))))
+        check_remove_reinsert_roundtrip(arr, min(n_remove, len(arr)))
+
+    @given(seed=st.integers(min_value=0, max_value=1 << 30),
+           n_rows=st.integers(min_value=4, max_value=96),
+           dim=st.integers(min_value=1, max_value=16))
+    @settings(max_examples=50, deadline=None)
+    def test_blocks_slot_consistency(self, seed, n_rows, dim):
+        r = np.random.default_rng(seed)
+        check_write_gather_slot_consistency(
+            seed, n_rows, dim, n_write=int(r.integers(1, n_rows)))
