@@ -2,10 +2,22 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test bench bench-storage bench-obs bench-check
+.PHONY: test lint ci bench bench-storage bench-obs bench-check
 
 test:
 	python -m pytest -x -q
+
+# reclint (DESIGN.md §11): repo-aware static analysis — JAX purity, Pallas
+# ops/ref contracts, thread-safety, metric-name discipline, determinism.
+# Exits non-zero on any finding not in reclint-baseline.json (policy: the
+# baseline may shrink, never grow).
+lint:
+	python -m repro.analysis --baseline reclint-baseline.json src/repro
+
+# Full CI gate: lint + tier-1 tests + BENCH perf gate vs the committed
+# baseline snapshot (scripts/ci.sh).
+ci:
+	bash scripts/ci.sh
 
 bench:
 	python -m benchmarks.run

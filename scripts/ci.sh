@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# CI entry point (ROADMAP: "wire the gate into CI"). Three gates, in order
+# of cost: static analysis, tier-1 tests, perf regression vs the committed
+# BENCH baseline snapshot.
+#
+#   1. make lint        — reclint (src/repro, reclint-baseline.json)
+#   2. make test        — tier-1 pytest suite
+#   3. perf gate        — regenerate BENCH_e2e_autoscale.json on this
+#                         machine, diff against the committed snapshot in
+#                         benchmarks/baselines/ with benchmarks/compare.py.
+#
+# The perf tolerance is generous (--max-regress 40): the e2e bench
+# calibrates from measured read/compute times, so absolute numbers move
+# with the host; the gate exists to catch algorithmic regressions (the
+# autoscaler no longer converging), not machine-to-machine jitter. To
+# re-baseline after an intentional change:
+#   python -m benchmarks.table2_e2e --autoscale
+#   cp BENCH_e2e_autoscale.json benchmarks/baselines/
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== ci: lint =="
+make lint
+
+echo "== ci: tier-1 tests =="
+make test
+
+echo "== ci: perf gate (BENCH_e2e_autoscale vs committed baseline) =="
+python -m benchmarks.table2_e2e --autoscale
+python -m benchmarks.compare \
+    benchmarks/baselines/BENCH_e2e_autoscale.json \
+    BENCH_e2e_autoscale.json \
+    --max-regress 40
+
+echo "== ci: all gates passed =="

@@ -1,0 +1,23 @@
+"""repro.analysis — reclint, the repo-aware static-analysis pass
+(DESIGN.md §11).
+
+Five rule families over stdlib ``ast``, each encoding an invariant this
+codebase's tests cannot cheaply enforce:
+
+  P*  JAX purity inside jit / shard_map / pallas_call-traced functions
+  K*  Pallas kernel package contracts (ops.py ↔ ref.py, grid/BlockSpec)
+  T*  locking discipline in thread-spawning modules
+  M*  metric / span name discipline (the obs registry namespace)
+  D*  determinism of the autoscaler decision core + sim harness
+
+Entry points: ``python -m repro.analysis`` (== ``make lint``) or the
+``run_lint`` API. Per-line suppression: ``# reclint: disable=P003``.
+Grandfathered findings live in the committed ``reclint-baseline.json``;
+the baseline may shrink, never grow.
+"""
+from __future__ import annotations
+
+from repro.analysis.core import (  # noqa: F401
+    Finding, LintResult, all_rules, apply_baseline, load_baseline,
+    run_lint, run_rules, write_baseline,
+)

@@ -1,0 +1,81 @@
+"""CLI: ``python -m repro.analysis [paths…]`` — see DESIGN.md §11.
+
+Exit codes: 0 clean (or everything baselined/suppressed), 1 findings,
+2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.analysis import core
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reclint — repo-aware static analysis "
+                    "(JAX purity, Pallas contracts, thread-safety, "
+                    "metric names, determinism)")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to lint (default: src/repro)")
+    ap.add_argument("--baseline", default="reclint-baseline.json",
+                    help="committed baseline JSON (default: "
+                         "reclint-baseline.json; missing file = empty)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report everything)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to --baseline and exit 0")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--json", action="store_true", dest="json_out",
+                    help="machine-readable findings on stdout")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, (doc, _) in sorted(core.all_rules().items()):
+            print(f"{rid}  {doc}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    paths = [pathlib.Path(p) for p in args.paths]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"reclint: no such path: {', '.join(map(str, missing))}",
+              file=sys.stderr)
+        return 2
+
+    try:
+        baseline = None if (args.no_baseline or args.write_baseline) \
+            else args.baseline
+        result = core.run_lint(paths, baseline_path=baseline, rules=rules)
+    except ValueError as e:
+        print(f"reclint: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        core.write_baseline(pathlib.Path(args.baseline), result.findings)
+        print(f"reclint: wrote {len(result.findings)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    if args.json_out:
+        print(json.dumps([f.to_json() for f in result.findings], indent=1))
+    else:
+        for f in result.findings:
+            print(f.render())
+        n_fail = len(result.failures)
+        n_base = len(result.findings) - n_fail
+        suffix = f" ({n_base} baselined)" if n_base else ""
+        print(f"reclint: {n_fail} finding(s){suffix}")
+    return result.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

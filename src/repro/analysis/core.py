@@ -1,0 +1,260 @@
+"""reclint core — findings, rule registry, suppressions, baseline, runner.
+
+The analyzer is deliberately repo-aware (DESIGN.md §11): rules encode
+*this* codebase's invariants — JAX purity under trace, Pallas ops/ref
+contracts, the threaded-I/O locking discipline, the ``subsystem/metric``
+naming scheme — rather than generic style. Everything is stdlib ``ast``;
+no third-party deps.
+
+Vocabulary:
+  * A **rule** is a callable ``rule(module) -> Iterator[Finding]``
+    registered under a stable ID (``P001`` …). Families share a prefix
+    letter: P purity, K kernel contracts, T thread-safety, M metric
+    names, D determinism.
+  * A **suppression** is a ``# reclint: disable=P001`` (or ``=all``)
+    comment on the finding's line.
+  * The **baseline** is a committed JSON list of fingerprinted findings
+    that are grandfathered: matched findings are reported as baselined
+    and do not fail the run. Fingerprints ignore line numbers so pure
+    line shifts don't churn the file. Policy: the baseline may shrink,
+    never grow (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import json
+import pathlib
+import re
+from typing import Callable, Iterable, Iterator
+
+SUPPRESS_RE = re.compile(r"#\s*reclint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative (or as-given) posix path
+    line: int          # 1-based; 0 = whole-file finding
+    message: str
+    baselined: bool = False
+
+    def fingerprint(self) -> str:
+        """Line-insensitive identity used for baseline matching."""
+        return f"{self.rule}|{self.path}|{self.message}"
+
+    def render(self) -> str:
+        tag = " [baselined]" if self.baselined else ""
+        return f"{self.path}:{self.line}: {self.rule} {self.message}{tag}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "baselined": self.baselined}
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file handed to every per-file rule."""
+
+    path: pathlib.Path
+    rel: str
+    source: str
+    tree: ast.Module
+    suppressions: dict[int, set[str]]   # line → rule ids (or {"all"})
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        ids = self.suppressions.get(line, ())
+        return "all" in ids or rule in ids
+
+
+def parse_suppressions(source: str) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = SUPPRESS_RE.search(text)
+        if m:
+            out[i] = {s.strip() for s in m.group(1).split(",") if s.strip()}
+    return out
+
+
+def load_module(path: pathlib.Path, root: pathlib.Path | None = None) -> Module | None:
+    """Parse one file; syntactically-broken files yield None (pytest owns
+    those failures, not the linter)."""
+    try:
+        source = path.read_text()
+        tree = ast.parse(source, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError):
+        return None
+    try:
+        rel = path.resolve().relative_to(
+            (root or pathlib.Path.cwd()).resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    return Module(path=path, rel=rel, source=source, tree=tree,
+                  suppressions=parse_suppressions(source))
+
+
+# --------------------------------------------------------------------------
+# rule registry
+# --------------------------------------------------------------------------
+
+RuleFn = Callable[[Module], Iterator[Finding]]
+
+_RULES: dict[str, tuple[str, RuleFn]] = {}
+
+
+def rule(rule_id: str, doc: str):
+    """Register a per-file rule under a stable ID."""
+    def deco(fn: RuleFn) -> RuleFn:
+        if rule_id in _RULES:
+            raise ValueError(f"duplicate rule id {rule_id}")
+        _RULES[rule_id] = (doc, fn)
+        return fn
+    return deco
+
+
+def all_rules() -> dict[str, tuple[str, RuleFn]]:
+    _ensure_loaded()
+    return dict(_RULES)
+
+
+def _ensure_loaded():
+    # import for side effect: each module registers its rules on import
+    from repro.analysis import (  # noqa: F401
+        determinism, kernel_contracts, metric_names, purity, threadsafety,
+    )
+
+
+# --------------------------------------------------------------------------
+# baseline
+# --------------------------------------------------------------------------
+
+def load_baseline(path: pathlib.Path) -> list[dict]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    assert isinstance(data, list), f"baseline {path} must be a JSON list"
+    return data
+
+
+def write_baseline(path: pathlib.Path, findings: Iterable[Finding]):
+    keys = sorted((f.path, f.rule, f.message) for f in findings)
+    entries = [{"rule": r, "path": p, "message": m} for p, r, m in keys]
+    path.write_text(json.dumps(entries, indent=1) + "\n")
+
+
+def apply_baseline(findings: list[Finding],
+                   baseline: list[dict]) -> list[Finding]:
+    """Mark findings that match a baseline entry. Matching consumes the
+    entry (multiplicity-aware): two identical new findings against one
+    grandfathered entry leave one of them failing."""
+    pool: dict[str, int] = {}
+    for e in baseline:
+        fp = f"{e['rule']}|{e['path']}|{e['message']}"
+        pool[fp] = pool.get(fp, 0) + 1
+    out = []
+    for f in findings:
+        fp = f.fingerprint()
+        if pool.get(fp, 0) > 0:
+            pool[fp] -= 1
+            f = dataclasses.replace(f, baselined=True)
+        out.append(f)
+    return out
+
+
+# --------------------------------------------------------------------------
+# runner
+# --------------------------------------------------------------------------
+
+DEFAULT_EXCLUDE = ("*/.git/*", "*/__pycache__/*")
+
+
+def iter_py_files(paths: Iterable[pathlib.Path]) -> Iterator[pathlib.Path]:
+    seen = set()
+    for p in paths:
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            posix = f.as_posix()
+            if any(fnmatch.fnmatch(posix, pat) for pat in DEFAULT_EXCLUDE):
+                continue
+            if f not in seen:
+                seen.add(f)
+                yield f
+
+
+def run_rules(paths: Iterable[pathlib.Path],
+              rules: Iterable[str] | None = None,
+              root: pathlib.Path | None = None) -> list[Finding]:
+    """Run the selected rules over every .py under ``paths``; returns raw
+    findings with suppressions already removed (they never surface)."""
+    registry = all_rules()
+    selected = set(rules) if rules is not None else set(registry)
+    unknown = selected - set(registry)
+    if unknown:
+        raise ValueError(f"unknown rule ids: {sorted(unknown)}")
+    findings: list[Finding] = []
+    for path in iter_py_files(paths):
+        mod = load_module(path, root=root)
+        if mod is None:
+            continue
+        for rid in sorted(selected):
+            _, fn = registry[rid]
+            for f in fn(mod):
+                if not mod.suppressed(f.line, f.rule):
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return findings
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list[Finding]        # everything surfaced (incl. baselined)
+
+    @property
+    def failures(self) -> list[Finding]:
+        return [f for f in self.findings if not f.baselined]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.failures else 0
+
+
+def run_lint(paths: Iterable[pathlib.Path | str],
+             baseline_path: pathlib.Path | str | None = None,
+             rules: Iterable[str] | None = None,
+             root: pathlib.Path | None = None) -> LintResult:
+    """The one-call API: analyze → apply baseline → LintResult."""
+    findings = run_rules([pathlib.Path(p) for p in paths],
+                         rules=rules, root=root)
+    if baseline_path is not None:
+        findings = apply_baseline(
+            findings, load_baseline(pathlib.Path(baseline_path)))
+    return LintResult(findings=findings)
+
+
+# --------------------------------------------------------------------------
+# small shared AST helpers
+# --------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> str | None:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def walk_scoped(node: ast.AST, *, into_defs: bool = True) -> Iterator[ast.AST]:
+    """ast.walk that can stop at nested function/class boundaries."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not into_defs and isinstance(
+                n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))

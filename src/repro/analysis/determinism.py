@@ -1,0 +1,155 @@
+"""D-family: determinism of the autoscaler decision core and the
+fake-clock simulation harness (DESIGN.md §10, §11).
+
+``decide(signals, state, cfg)`` is documented as a PURE function — the
+simulation tests assert *exact* action sequences, and
+``benchmarks/table2_e2e.py`` replays calibrated traces bit-identically.
+Anything wall-clock- or hash-order-dependent that sneaks into the
+decision path breaks that contract silently (the tests would only flake
+later). These rules apply to modules that define a top-level ``decide``
+function, a ``simulate`` function, or a ``SimPipeline`` class, and check
+every function statically reachable (same-module call graph) from those
+roots:
+
+  D001  wall-clock reads: ``time.time`` / ``perf_counter`` /
+        ``monotonic`` / ``sleep``, ``datetime.now`` / ``utcnow``.
+  D002  randomness: ``random.*``, ``np.random.*``, ``numpy.random.*``.
+  D003  iteration over an unordered ``set`` (set literal, ``set(…)``
+        call, or a local assigned from one) in a ``for`` loop without
+        ``sorted(…)`` — iteration order varies across processes with
+        PYTHONHASHSEED, so replay is not bit-identical.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Finding, Module, dotted_name, rule
+
+_ROOT_FUNCS = {"decide", "simulate"}
+_ROOT_CLASSES = {"SimPipeline"}
+_CLOCK_CALLS = {"time.time", "time.perf_counter", "time.monotonic",
+                "time.process_time", "time.sleep", "time.time_ns",
+                "datetime.now", "datetime.utcnow", "datetime.datetime.now",
+                "datetime.datetime.utcnow"}
+_RANDOM_PREFIXES = ("random.", "np.random.", "numpy.random.",
+                    "jax.random.")
+_RANDOM_OK = {"jax.random."}  # keyed PRNG is deterministic by construction
+
+
+def _reachable(mod: Module) -> list[tuple[str, ast.FunctionDef]]:
+    """Functions reachable from the module's determinism roots via
+    same-module Name calls and same-class self.<m>() calls."""
+    top: dict[str, ast.FunctionDef] = {}
+    classes: dict[str, dict[str, ast.FunctionDef]] = {}
+    for node in mod.tree.body:
+        if isinstance(node, ast.FunctionDef):
+            top[node.name] = node
+        elif isinstance(node, ast.ClassDef):
+            classes[node.name] = {
+                m.name: m for m in node.body if isinstance(m, ast.FunctionDef)}
+
+    roots: list[tuple[str, str | None]] = []   # (func name, class or None)
+    for name in _ROOT_FUNCS & set(top):
+        roots.append((name, None))
+    for cname in _ROOT_CLASSES & set(classes):
+        for mname in classes[cname]:
+            roots.append((mname, cname))
+    if not roots:
+        return []
+
+    seen: set[tuple[str, str | None]] = set()
+    out: list[tuple[str, ast.FunctionDef]] = []
+    stack = list(roots)
+    while stack:
+        key = stack.pop()
+        if key in seen:
+            continue
+        seen.add(key)
+        name, cls = key
+        fn = (classes.get(cls, {}) if cls else top).get(name)
+        if fn is None:
+            continue
+        out.append((f"{cls}.{name}" if cls else name, fn))
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            if callee is None:
+                continue
+            if callee in top:
+                stack.append((callee, None))
+            elif callee.startswith("self.") and cls:
+                stack.append((callee[len("self."):], cls))
+    return out
+
+
+def _iter_calls(fn: ast.FunctionDef) -> Iterator[ast.Call]:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+@rule("D001", "wall-clock read in decide()-reachable / simulated code")
+def check_clock(mod: Module) -> Iterator[Finding]:
+    for qual, fn in _reachable(mod):
+        for call in _iter_calls(fn):
+            name = dotted_name(call.func)
+            if name in _CLOCK_CALLS:
+                yield Finding(
+                    "D001", mod.rel, call.lineno,
+                    f"{name}() in {qual}: the decision core / sim harness "
+                    "must be a pure function of its inputs (pass times in "
+                    "via Signals / the virtual clock)")
+
+
+@rule("D002", "randomness in decide()-reachable / simulated code")
+def check_random(mod: Module) -> Iterator[Finding]:
+    for qual, fn in _reachable(mod):
+        for call in _iter_calls(fn):
+            name = dotted_name(call.func)
+            if name is None:
+                continue
+            if any(name.startswith(p) for p in _RANDOM_PREFIXES) and \
+                    not any(name.startswith(ok) for ok in _RANDOM_OK):
+                yield Finding(
+                    "D002", mod.rel, call.lineno,
+                    f"{name}() in {qual}: unseeded randomness breaks "
+                    "bit-identical replay (thread any needed noise through "
+                    "the config)")
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.Set):
+        return True
+    if isinstance(node, ast.SetComp):
+        return True
+    if isinstance(node, ast.Call) and dotted_name(node.func) == "set":
+        return True
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub)) and (
+            _is_set_expr(node.left) or _is_set_expr(node.right)):
+        return True
+    return False
+
+
+@rule("D003", "unordered set iteration in decide()-reachable / simulated code")
+def check_set_iteration(mod: Module) -> Iterator[Finding]:
+    for qual, fn in _reachable(mod):
+        set_locals: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and _is_set_expr(node.value):
+                set_locals.add(node.targets[0].id)
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.For, ast.AsyncFor)):
+                continue
+            it = node.iter
+            flagged = _is_set_expr(it) or (
+                isinstance(it, ast.Name) and it.id in set_locals)
+            if flagged:
+                yield Finding(
+                    "D003", mod.rel, node.lineno,
+                    f"for-loop over an unordered set in {qual}: iteration "
+                    "order depends on PYTHONHASHSEED — wrap in sorted(…)")

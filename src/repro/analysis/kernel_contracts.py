@@ -1,0 +1,228 @@
+"""K-family: Pallas kernel package contracts (DESIGN.md §11).
+
+Every kernel package ships three files (kernels/__init__.py):
+``<name>.py`` (pallas_call + BlockSpec tiling), ``ops.py`` (public jit'd
+wrapper) and ``ref.py`` (pure-jnp oracle). The tests sweep ops-vs-ref
+allclose; these rules catch the drift the sweeps can't:
+
+  K001  ops/ref signature contract: every public function in ``ref.py``
+        must exist in the sibling ``ops.py`` with the ref's parameters
+        as a leading prefix (same names, same order) and identical
+        defaults for shared parameters. Extra ops-only parameters
+        (``interpret``, tile knobs) must carry defaults so the oracle
+        call shape remains valid for the optimized op.
+  K002  grid divisibility: a ``pallas_call`` grid element of the form
+        ``n // t`` needs an in-function guard that ``t`` divides —
+        an ``assert … n % t == 0 …`` or ``n = _round_up(…, t)``-style
+        padding. An unguarded ``//`` silently drops the remainder rows.
+  K003  BlockSpec literal tile alignment: integer literals in a
+        ``pl.BlockSpec`` block shape must be TPU-tileable — the last
+        dim 1 or a multiple of 128 (lanes), the second-to-last 1 or a
+        multiple of 8 (sublanes).
+
+K001 is cross-file: it fires on the ``ops.py`` module of any directory
+that also contains ``ref.py`` (so fixture packages work anywhere).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Iterator
+
+from repro.analysis.core import Finding, Module, dotted_name, rule
+
+_ROUND_UP_NAMES = {"_round_up", "round_up", "ceil_to", "_ceil_to"}
+
+
+# --------------------------------------------------------------------------
+# K001 — ops/ref signature contract
+# --------------------------------------------------------------------------
+
+def _public_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, ast.FunctionDef) and not n.name.startswith("_")}
+
+
+def _params_with_defaults(fn: ast.FunctionDef) -> list[tuple[str, str | None]]:
+    """[(name, default-dump-or-None)] in declaration order (pos + kwonly)."""
+    a = fn.args
+    pos = [*a.posonlyargs, *a.args]
+    out: list[tuple[str, str | None]] = []
+    pad = len(pos) - len(a.defaults)
+    for i, p in enumerate(pos):
+        d = a.defaults[i - pad] if i >= pad else None
+        out.append((p.arg, ast.dump(d) if d is not None else None))
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        out.append((p.arg, ast.dump(d) if d is not None else None))
+    return out
+
+
+@rule("K001", "ops.py public signature drifted from its ref.py oracle")
+def check_ops_ref_contract(mod: Module) -> Iterator[Finding]:
+    if mod.path.name != "ops.py":
+        return
+    ref_path = mod.path.parent / "ref.py"
+    if not ref_path.exists():
+        return
+    try:
+        ref_tree = ast.parse(ref_path.read_text(), filename=str(ref_path))
+    except SyntaxError:
+        return
+    ops_fns = _public_functions(mod.tree)
+    # `alias = impl` re-exports satisfy presence if impl matches — resolve
+    # one level of top-level Name aliases.
+    aliases = {t.targets[0].id: t.value.id for t in mod.tree.body
+               if isinstance(t, ast.Assign) and len(t.targets) == 1
+               and isinstance(t.targets[0], ast.Name)
+               and isinstance(t.value, ast.Name)}
+    for name, ref_fn in _public_functions(ref_tree).items():
+        ops_fn = ops_fns.get(name) or ops_fns.get(aliases.get(name, ""))
+        if ops_fn is None:
+            yield Finding(
+                "K001", mod.rel, 1,
+                f"ref.py defines public {name}() but ops.py has no "
+                "counterpart — the oracle and the op have diverged")
+            continue
+        ref_params = _params_with_defaults(ref_fn)
+        ops_params = _params_with_defaults(ops_fn)
+        if [p for p, _ in ops_params[:len(ref_params)]] != \
+                [p for p, _ in ref_params]:
+            yield Finding(
+                "K001", mod.rel, ops_fn.lineno,
+                f"{name}(): ops params {[p for p, _ in ops_params]} do not "
+                f"start with ref params {[p for p, _ in ref_params]}")
+            continue
+        for (rp, rd), (_, od) in zip(ref_params, ops_params):
+            if rd is not None and od is not None and rd != od:
+                yield Finding(
+                    "K001", mod.rel, ops_fn.lineno,
+                    f"{name}(): default for {rp!r} differs between ops "
+                    "and ref")
+        for p, d in ops_params[len(ref_params):]:
+            if d is None:
+                yield Finding(
+                    "K001", mod.rel, ops_fn.lineno,
+                    f"{name}(): extra ops-only param {p!r} has no default — "
+                    "ref-shaped calls would break")
+
+
+# --------------------------------------------------------------------------
+# K002 — grid divisibility guards
+# --------------------------------------------------------------------------
+
+def _grid_divisions(fn: ast.FunctionDef) -> list[tuple[str | None, str, int]]:
+    """(dividend, divisor, line) for every ``x // t`` feeding a ``grid=``.
+
+    Handles the three shapes the repo uses: a tuple literal directly in
+    ``grid=``, a local ``grid = (x // t, …)`` assignment, and tuple
+    unpacking ``nq, nk = t // tq, t // tk`` whose names reach ``grid=``.
+    """
+    # local name → value expr (last assignment wins; good enough here)
+    assigned: dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if isinstance(t, ast.Name):
+                assigned[t.id] = node.value
+            elif isinstance(t, ast.Tuple) and isinstance(node.value, ast.Tuple) \
+                    and len(t.elts) == len(node.value.elts):
+                for tgt, val in zip(t.elts, node.value.elts):
+                    if isinstance(tgt, ast.Name):
+                        assigned[tgt.id] = val
+
+    def divisions(expr: ast.AST, depth: int = 0) -> list[tuple[str | None, str, int]]:
+        out = []
+        if isinstance(expr, ast.Name) and depth < 3 and expr.id in assigned:
+            out += divisions(assigned[expr.id], depth + 1)
+        elif isinstance(expr, ast.Tuple):
+            for e in expr.elts:
+                out += divisions(e, depth + 1)
+        elif isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.FloorDiv):
+            divisor = dotted_name(expr.right)
+            if divisor is not None:
+                out.append((dotted_name(expr.left), divisor, expr.lineno))
+        return out
+
+    sites: list[tuple[str | None, str, int]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg == "grid":
+                    sites += divisions(kw.value)
+    return sites
+
+
+def _has_guard(fn: ast.FunctionDef, dividend: str | None, divisor: str) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assert):
+            for sub in ast.walk(node.test):
+                if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod) \
+                        and dotted_name(sub.right) == divisor \
+                        and (dividend is None
+                             or dotted_name(sub.left) == dividend):
+                    return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in _ROUND_UP_NAMES and len(node.args) >= 2 \
+                and dotted_name(node.args[1]) == divisor:
+            return True
+    return False
+
+
+@rule("K002", "pallas_call grid floor-division without a divisibility guard")
+def check_grid_divisibility(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        has_pallas = any(
+            isinstance(c, ast.Call)
+            and dotted_name(c.func) in ("pl.pallas_call", "pallas_call")
+            for c in ast.walk(node))
+        if not has_pallas:
+            continue
+        seen: set[tuple[str | None, str]] = set()
+        for dividend, divisor, line in _grid_divisions(node):
+            if (dividend, divisor) in seen:
+                continue
+            seen.add((dividend, divisor))
+            if not _has_guard(node, dividend, divisor):
+                lhs = dividend or "<expr>"
+                yield Finding(
+                    "K002", mod.rel, line,
+                    f"grid uses {lhs} // {divisor} in {node.name!r} without "
+                    f"an `assert {lhs} % {divisor} == 0` (or _round_up "
+                    "padding) — remainder rows are silently dropped")
+
+
+# --------------------------------------------------------------------------
+# K003 — BlockSpec literal tile alignment
+# --------------------------------------------------------------------------
+
+@rule("K003", "BlockSpec literal tile dim not TPU-aligned")
+def check_blockspec_alignment(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and dotted_name(node.func) in ("pl.BlockSpec", "BlockSpec")):
+            continue
+        shape = node.args[0] if node.args else None
+        for kw in node.keywords:
+            if kw.arg == "block_shape":
+                shape = kw.value
+        if not isinstance(shape, ast.Tuple) or len(shape.elts) < 2:
+            continue
+        checks = [(shape.elts[-1], 128, "last (lane)"),
+                  (shape.elts[-2], 8, "second-to-last (sublane)")]
+        for elt, mult, which in checks:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                v = elt.value
+                if v != 1 and v % mult != 0:
+                    yield Finding(
+                        "K003", mod.rel, node.lineno,
+                        f"BlockSpec {which} dim literal {v} is neither 1 "
+                        f"nor a multiple of {mult} — the tile will be "
+                        "padded or rejected by Mosaic")
+
+
+def kernel_packages(root: pathlib.Path) -> list[pathlib.Path]:
+    """Directories under ``root`` holding an ops.py + ref.py pair."""
+    return sorted(p.parent for p in root.rglob("ops.py")
+                  if (p.parent / "ref.py").exists())

@@ -1,0 +1,101 @@
+"""M-family: metric/span name discipline (DESIGN.md §9, §11).
+
+Every instrument name flows through ``obs.registry.check_name`` at
+runtime — but a bad literal then fails at *step* time, deep in a run.
+These rules evaluate the literals at lint time against the very same
+validator (the analyzer imports ``check_name``; there is exactly one
+definition of "valid name" in the repo).
+
+  M001  string literal passed to ``.counter(…)`` / ``.gauge(…)`` /
+        ``.histogram(…)`` or to ``label(…)`` / ``check_name(…)`` that
+        ``check_name`` rejects.
+  M002  string literal passed to ``.span(…)`` whose derived metric name
+        ``trace/<literal>_s`` ``check_name`` rejects — spans and metrics
+        share one namespace (the Tracer folds every span into a
+        ``trace/…`` histogram).
+
+Only statically-evaluable strings are checked: plain literals, literal
+concatenation, and f-strings with no placeholders. Dynamic names are the
+runtime validator's job.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Finding, Module, dotted_name, rule
+from repro.obs.registry import check_name
+
+_REGISTRY_METHODS = {"counter", "gauge", "histogram"}
+_NAME_FUNCS = {"label", "obs.label", "check_name", "registry.check_name"}
+
+
+def _literal_str(node: ast.AST) -> str | None:
+    """Statically evaluate a string expression, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.JoinedStr):
+        parts = []
+        for v in node.values:
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                parts.append(v.value)
+            else:
+                return None
+        return "".join(parts)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        left, right = _literal_str(node.left), _literal_str(node.right)
+        if left is not None and right is not None:
+            return left + right
+    return None
+
+
+def _first_arg_literal(call: ast.Call) -> str | None:
+    if call.args:
+        return _literal_str(call.args[0])
+    for kw in call.keywords:
+        if kw.arg == "name":
+            return _literal_str(kw.value)
+    return None
+
+
+@rule("M001", "metric name literal rejected by obs.registry.check_name")
+def check_metric_literals(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        is_site = False
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _REGISTRY_METHODS:
+            is_site = True
+        elif dotted_name(node.func) in _NAME_FUNCS:
+            is_site = True
+        if not is_site:
+            continue
+        lit = _first_arg_literal(node)
+        if lit is None:
+            continue
+        try:
+            check_name(lit)
+        except ValueError as e:
+            yield Finding("M001", mod.rel, node.lineno,
+                          f"{e} (would fail at step time; fix the literal)")
+
+
+@rule("M002", "span name literal outside the trace/ metric namespace")
+def check_span_literals(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "span"):
+            continue
+        lit = _first_arg_literal(node)
+        if lit is None:
+            continue
+        try:
+            check_name(f"trace/{lit}_s")
+        except ValueError:
+            yield Finding(
+                "M002", mod.rel, node.lineno,
+                f"span name {lit!r}: trace/{lit}_s is not a valid metric "
+                "name — spans fold into trace/ histograms and share the "
+                "metric namespace")

@@ -1,0 +1,221 @@
+"""P-family: JAX purity inside traced functions (DESIGN.md §11).
+
+A function is *traced* when it is:
+  * decorated with ``jax.jit`` / ``jit`` (bare or via
+    ``functools.partial(jax.jit, ...)``), or
+  * passed (possibly through ``functools.partial(f, ...)``) as the
+    function argument of ``jax.jit(...)``, ``shard_map(...)`` /
+    ``jax.shard_map(...)`` or ``pl.pallas_call(...)`` anywhere in the
+    same module — closures handed to those wrappers run under trace
+    exactly like decorated defs.
+
+Inside a traced function (including defs nested in it):
+
+  P001  ``global`` / ``nonlocal`` declarations — mutating enclosing
+        state under trace runs once at trace time, then never again.
+  P002  ``print`` / ``open`` calls — side effects silently vanish on
+        the cached path (use ``jax.debug.print`` / host callbacks).
+  P003  Python-level ``if``/``while`` on a traced parameter — the
+        branch is resolved at trace time on a tracer, which raises (or
+        worse, silently specializes). Parameters named in
+        ``static_argnames`` are exempt, as are shape/dtype-style
+        attribute reads (``x.ndim``, ``x.shape[0]``), ``len(x)``,
+        ``isinstance(x, ...)`` and ``x is None`` checks — those are
+        static under trace.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Finding, Module, dotted_name, rule
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_WRAPPER_NAMES = {"jax.jit", "jit", "shard_map", "jax.shard_map",
+                  "pallas_call", "pl.pallas_call"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_STATIC_ATTRS = {"ndim", "shape", "dtype", "size", "sharding", "aval",
+                 "weak_type", "itemsize", "nbytes"}
+
+
+def _call_name(call: ast.Call) -> str | None:
+    return dotted_name(call.func)
+
+
+def _unwrap_partial(node: ast.AST) -> tuple[ast.AST, set[str]]:
+    """functools.partial(f, k=v, …) → (f, {bound kwarg names}). Keywords
+    bound by partial are plain Python values at trace time, so they count
+    as static parameters of the wrapped kernel."""
+    if isinstance(node, ast.Call) and _call_name(node) in _PARTIAL_NAMES \
+            and node.args:
+        bound = {kw.arg for kw in node.keywords if kw.arg is not None}
+        return node.args[0], bound
+    return node, set()
+
+
+def _static_argnames(call: ast.Call) -> set[str]:
+    out: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+    return out
+
+
+class _Scope(ast.NodeVisitor):
+    """Collect every FunctionDef with its enclosing-scope qualname."""
+
+    def __init__(self):
+        self.defs: dict[str, list[ast.FunctionDef]] = {}
+        self._stack: list[str] = []
+
+    def _visit_def(self, node):
+        self.defs.setdefault(node.name, []).append(node)
+        self._stack.append(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+    def visit_ClassDef(self, node):
+        self._stack.append(node.name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+
+def _traced_functions(mod: Module) -> dict[ast.FunctionDef, set[str]]:
+    """→ {function node: static param names} for every traced function."""
+    scope = _Scope()
+    scope.visit(mod.tree)
+    traced: dict[ast.FunctionDef, set[str]] = {}
+
+    def mark(fn_expr: ast.AST, statics: set[str]):
+        fn_expr, bound = _unwrap_partial(fn_expr)
+        if isinstance(fn_expr, ast.Name):
+            for d in scope.defs.get(fn_expr.id, ()):
+                traced.setdefault(d, set()).update(statics | bound)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if dotted_name(dec) in _JIT_NAMES:
+                    traced.setdefault(node, set())
+                elif isinstance(dec, ast.Call):
+                    name = _call_name(dec)
+                    if name in _JIT_NAMES:
+                        traced.setdefault(node, set()).update(
+                            _static_argnames(dec))
+                    elif name in _PARTIAL_NAMES and dec.args \
+                            and dotted_name(dec.args[0]) in _JIT_NAMES:
+                        traced.setdefault(node, set()).update(
+                            _static_argnames(dec))
+        elif isinstance(node, ast.Call):
+            name = _call_name(node)
+            if name in _WRAPPER_NAMES and node.args:
+                mark(node.args[0], _static_argnames(node))
+            elif name in _WRAPPER_NAMES:
+                for kw in node.keywords:   # pallas_call(kernel=...)
+                    if kw.arg in ("f", "kernel", "fun"):
+                        mark(kw.value, set())
+    return traced
+
+
+def _body_nodes(fn: ast.FunctionDef) -> Iterator[ast.AST]:
+    for stmt in fn.body:
+        yield from ast.walk(stmt)
+        yield stmt
+
+
+def _param_names(fn: ast.FunctionDef) -> set[str]:
+    a = fn.args
+    names = [p.arg for p in
+             (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def _dynamic_param_uses(test: ast.AST, params: set[str]) -> list[ast.Name]:
+    """Name nodes in ``test`` that read a traced param *dynamically* —
+    i.e. not through static metadata (.shape/.ndim/...), len(),
+    isinstance(), or ``is (not) None`` checks."""
+    hits: list[ast.Name] = []
+
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(test):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+
+    def is_static_use(name: ast.Name) -> bool:
+        node: ast.AST = name
+        while node in parents:
+            parent = parents[node]
+            if isinstance(parent, ast.Attribute) and parent.value is node:
+                return parent.attr in _STATIC_ATTRS
+            if isinstance(parent, ast.Call):
+                fname = dotted_name(parent.func)
+                if fname in ("len", "isinstance", "type", "callable"):
+                    return True
+                return False  # arbitrary call on the tracer: dynamic
+            if isinstance(parent, ast.Compare) and any(
+                    isinstance(c, ast.Constant) and c.value is None
+                    for c in parent.comparators):
+                return True   # `x is None` / `x == None` style
+            if isinstance(parent, (ast.Subscript, ast.BinOp, ast.UnaryOp,
+                                   ast.BoolOp, ast.Compare, ast.IfExp,
+                                   ast.Tuple, ast.List)):
+                node = parent
+                continue
+            return False
+        return False
+
+    for node in ast.walk(test):
+        if isinstance(node, ast.Name) and node.id in params \
+                and not is_static_use(node):
+            hits.append(node)
+    return hits
+
+
+@rule("P001", "global/nonlocal mutation inside a traced function")
+def check_global_mutation(mod: Module) -> Iterator[Finding]:
+    for fn in _traced_functions(mod):
+        for node in _body_nodes(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                kind = "global" if isinstance(node, ast.Global) else "nonlocal"
+                yield Finding(
+                    "P001", mod.rel, node.lineno,
+                    f"{kind} {', '.join(node.names)} mutated inside traced "
+                    f"function {fn.name!r}: runs at trace time only")
+
+
+@rule("P002", "print/file-I/O side effect inside a traced function")
+def check_side_effects(mod: Module) -> Iterator[Finding]:
+    for fn in _traced_functions(mod):
+        for node in _body_nodes(fn):
+            if isinstance(node, ast.Call) and \
+                    dotted_name(node.func) in ("print", "open"):
+                yield Finding(
+                    "P002", mod.rel, node.lineno,
+                    f"{dotted_name(node.func)}() inside traced function "
+                    f"{fn.name!r}: side effects vanish on the cached path "
+                    "(use jax.debug.print / io_callback)")
+
+
+@rule("P003", "Python-level branch on a traced value")
+def check_traced_branch(mod: Module) -> Iterator[Finding]:
+    for fn, statics in _traced_functions(mod).items():
+        dynamic = _param_names(fn) - statics
+        for node in _body_nodes(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                for use in _dynamic_param_uses(node.test, dynamic):
+                    yield Finding(
+                        "P003", mod.rel, node.lineno,
+                        f"Python `{'if' if isinstance(node, ast.If) else 'while'}`"
+                        f" on traced parameter {use.id!r} in {fn.name!r}: "
+                        "resolved at trace time (use jnp.where / lax.cond, "
+                        "or mark it static)")
+                    break  # one finding per statement

@@ -1,0 +1,121 @@
+"""T-family: locking discipline in thread-spawning modules (DESIGN.md §11).
+
+Applies only to modules that actually create ``threading.Thread`` (the
+I/O pool in io/columnio.py, the autoscaler actuation path, the async
+checkpoint saver) — single-threaded modules are exempt by construction.
+
+  T001  a ``self.<attr>`` assigned in two or more methods of one class
+        where at least one non-``__init__`` write site is not inside a
+        ``with self.<…lock…>:`` block. In a module that spawns threads,
+        a cross-method attribute write is presumed cross-thread shared
+        state; the registry instruments lock internally, plain Python
+        attributes do not.
+
+Conventions honored (they make the real code pass without noise):
+  * ``__init__`` writes are construction, not contention — they count
+    as a writer (so a later unlocked writer still fires) but are never
+    themselves flagged.
+  * methods named ``*_locked`` assert the caller holds the lock — their
+    writes are treated as locked.
+  * any context manager attribute whose name contains ``lock`` counts
+    (``self._lock``, ``self._cursor_lock``, …).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator
+
+from repro.analysis.core import Finding, Module, dotted_name, rule
+
+
+def _spawns_threads(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name and (name.endswith("threading.Thread")
+                         or name == "Thread"
+                         or name.endswith("ThreadPoolExecutor")):
+                return True
+    return False
+
+
+@dataclasses.dataclass
+class _Write:
+    attr: str
+    method: str
+    line: int
+    locked: bool
+
+
+def _is_lock_with(item: ast.withitem) -> bool:
+    name = dotted_name(item.context_expr)
+    if name is None and isinstance(item.context_expr, ast.Call):
+        name = dotted_name(item.context_expr.func)
+    return name is not None and "lock" in name.lower()
+
+
+def _method_writes(method: ast.FunctionDef) -> list[_Write]:
+    """self.<attr> assignment sites with their lock context."""
+    locked_method = method.name.endswith("_locked")
+    writes: list[_Write] = []
+
+    def visit(node: ast.AST, locked: bool):
+        if isinstance(node, ast.With):
+            inner = locked or any(_is_lock_with(i) for i in node.items)
+            for child in node.body:
+                visit(child, inner)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return  # nested closures have their own scope; out of scope here
+        targets: list[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Attribute) and \
+                    isinstance(t.value, ast.Name) and t.value.id == "self":
+                writes.append(_Write(t.attr, method.name, node.lineno, locked))
+            elif isinstance(t, ast.Tuple):
+                for e in t.elts:
+                    if isinstance(e, ast.Attribute) and \
+                            isinstance(e.value, ast.Name) and e.value.id == "self":
+                        writes.append(_Write(e.attr, method.name,
+                                             node.lineno, locked))
+        for child in ast.iter_child_nodes(node):
+            visit(child, locked)
+
+    for stmt in method.body:
+        visit(stmt, locked_method)
+    return writes
+
+
+@rule("T001", "cross-method self attribute write without the lock")
+def check_unlocked_shared_writes(mod: Module) -> Iterator[Finding]:
+    if not _spawns_threads(mod.tree):
+        return
+    for cls in ast.walk(mod.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        writes: list[_Write] = []
+        for item in cls.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                writes += _method_writes(item)
+        by_attr: dict[str, list[_Write]] = {}
+        for w in writes:
+            by_attr.setdefault(w.attr, []).append(w)
+        for attr, ws in sorted(by_attr.items()):
+            methods = {w.method for w in ws}
+            if len(methods) < 2:
+                continue  # single-method attribute: not cross-thread shared
+            for w in ws:
+                if w.method == "__init__" or w.locked:
+                    continue
+                others = sorted(methods - {w.method}) or sorted(methods)
+                yield Finding(
+                    "T001", mod.rel, w.line,
+                    f"{cls.name}.{w.method} writes self.{attr} without a "
+                    f"lock, but {', '.join(others)} also write(s) it — in a "
+                    "thread-spawning module this is a data race (guard with "
+                    "`with self._lock:`)")

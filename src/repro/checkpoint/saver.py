@@ -114,6 +114,7 @@ class AsyncSaver:
         self.n_shards = n_shards
         self.keep_last = keep_last
         self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()   # guards the _thread hand-off
         reg = registry if registry is not None else obs.get_registry()
         self._c_saves = reg.counter("ckpt/saves")
         self._c_bytes = reg.counter("ckpt/bytes_written")
@@ -140,15 +141,18 @@ class AsyncSaver:
             self._c_bytes.inc(nbytes)
             self._g_step.set(step)
 
-        self._thread = threading.Thread(target=run, daemon=True)
-        self._thread.start()
+        t = threading.Thread(target=run, daemon=True)
+        with self._lock:
+            self._thread = t
+        t.start()
 
     def wait(self):
-        if self._thread is not None:
+        with self._lock:
+            t, self._thread = self._thread, None
+        if t is not None:
             t0 = time.perf_counter()
-            self._thread.join()
+            t.join()
             self._h_block.observe(time.perf_counter() - t0)
-            self._thread = None
 
 
 def latest_step(directory: str | pathlib.Path) -> int | None:

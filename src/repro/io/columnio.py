@@ -492,8 +492,10 @@ class AsyncLoader:
                 flat = vals[lo:hi]
                 blens = lens[s: s + br].copy()
                 if flat.shape[0] > budget:  # truncate & count
-                    self.overflow += int(flat.shape[0] - budget)
-                    self._c_overflow.inc(int(flat.shape[0] - budget))
+                    dropped = int(flat.shape[0] - budget)
+                    with self._lock:  # _assemble runs on every reader thread
+                        self.overflow += dropped
+                    self._c_overflow.inc(dropped)
                     cum = np.cumsum(blens)
                     blens = np.where(cum <= budget, blens, np.maximum(
                         budget - np.concatenate([[0], cum[:-1]]), 0)).astype(np.int32)
@@ -506,7 +508,8 @@ class AsyncLoader:
                 np.cumsum(blens, out=splits[1:])
                 dt = jnp.int64 if np.issubdtype(vals.dtype, np.integer) else jnp.float32
                 batch[k] = Ragged(jnp.asarray(pad, dtype=dt), jnp.asarray(splits))
-            self.rows_seen += br
+            with self._lock:  # _assemble runs on every reader thread
+                self.rows_seen += br
             self._c_batches.inc()
             self._c_rows.inc(br)
             yield batch

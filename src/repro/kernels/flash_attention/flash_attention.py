@@ -215,6 +215,7 @@ def flash_bwd(
     scale: float,  # 1/sqrt(UNPADDED head dim)
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     bh, t, hd = q.shape
+    assert t % tq == 0 and t % tk == 0, (t, tq, tk)
     nq, nk = t // tq, t // tk
     delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # (BH,T)
     lse3 = lse[..., None]

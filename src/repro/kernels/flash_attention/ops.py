@@ -91,3 +91,15 @@ def _vjp_bwd(causal, interpret, res, g):
 
 
 flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """ref.py-shaped entry point (the K001 ops↔ref contract): identical
+    call shape to the oracle's ``attention``, served by the fused kernel."""
+    return flash_attention(q, k, v, causal, interpret)

@@ -22,7 +22,7 @@ from __future__ import annotations
 from repro.obs.mbu_bridge import record_mbu, record_roofline  # noqa: F401
 from repro.obs.registry import (  # noqa: F401
     Counter, Gauge, Histogram, MetricsRegistry, NAME_RE, check_name,
-    label, sanitize, valid_name,
+    label, sanitize, span_name, valid_name,
 )
 from repro.obs.telemetry import (  # noqa: F401
     ConsoleReporter, TelemetryWriter, read_jsonl,

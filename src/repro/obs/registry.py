@@ -43,6 +43,20 @@ def check_name(name: str) -> str:
     return name
 
 
+def span_name(name: str) -> str:
+    """Validate a Tracer span name against the shared metric namespace.
+
+    Spans and metrics are ONE namespace: every span folds into a
+    ``trace/<name>_s`` registry histogram (tracing.py), and the ROADMAP
+    ``table2_e2e``→``trace/`` fold keys on the same scheme. A span name
+    must therefore be a bare snake_case segment (optionally ``/``-nested,
+    e.g. ``data_wait`` or ``eval/val_loss``) such that both
+    ``trace/<name>`` and ``trace/<name>_s`` pass ``check_name``. Returns
+    the derived histogram name ``trace/<name>_s``."""
+    check_name(f"trace/{name}")
+    return check_name(f"trace/{name}_s")
+
+
 def sanitize(fragment: str) -> str:
     """Coerce an arbitrary label (arch id, op name) into one legal
     snake_case name segment: ``wide-deep`` → ``wide_deep``."""

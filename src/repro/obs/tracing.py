@@ -30,7 +30,7 @@ import contextlib
 import time
 from typing import Iterator
 
-from repro.obs.registry import MetricsRegistry, check_name
+from repro.obs.registry import MetricsRegistry, span_name
 from repro.obs.telemetry import TelemetryWriter
 
 PHASES = ("data_wait", "pre_step", "device_step", "post_step",
@@ -99,7 +99,7 @@ class Tracer:
 
     @contextlib.contextmanager
     def span(self, name: str) -> Iterator[None]:
-        check_name(f"trace/{name}")
+        hist_name = span_name(name)  # spans + metrics share one namespace
         prof = _profiler_annotation(name) if self.profile else None
         if prof is not None:
             prof.__enter__()
@@ -111,7 +111,7 @@ class Tracer:
             if prof is not None:
                 prof.__exit__(None, None, None)
             if self.registry is not None:
-                self.registry.histogram(f"trace/{name}_s").observe(dt)
+                self.registry.histogram(hist_name).observe(dt)
             if self._current is not None:
                 self._current.add(name, dt)
             elif self.writer is not None:  # standalone span

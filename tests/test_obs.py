@@ -152,6 +152,48 @@ class TestTracer:
         assert recs[0]["name"] == "checkpoint"
 
 
+class TestSpanNamespace:
+    """Spans and metrics share ONE namespace (DESIGN.md §9/§11): every
+    span folds into a ``trace/<name>_s`` histogram, so span names are
+    check_name-validated at span entry — not at step-record time."""
+
+    def test_span_name_returns_histogram_name(self):
+        assert obs.span_name("data_wait") == "trace/data_wait_s"
+        assert obs.span_name("eval/val_loss") == "trace/eval/val_loss_s"
+
+    def test_span_name_rejects_non_metric_names(self):
+        for bad in ("Bad-Phase", "data wait", "_leading", "trailing/", ""):
+            with pytest.raises(ValueError):
+                obs.span_name(bad)
+
+    def test_all_phases_are_valid_span_names(self):
+        for phase in obs.PHASES:
+            assert obs.span_name(phase) == f"trace/{phase}_s"
+
+    def test_tracer_rejects_bad_span_at_entry(self):
+        tr = obs.Tracer(obs.MetricsRegistry())
+        with pytest.raises(ValueError, match="bad metric name"):
+            with tr.span("Not A Phase"):
+                pass  # pragma: no cover — span() raises before the body
+
+    def test_null_tracer_still_validates(self):
+        from repro.obs.tracing import NullTracer
+        tr = NullTracer()
+        with pytest.raises(ValueError):
+            with tr.span("Bad-Name"):
+                pass  # pragma: no cover
+        with tr.span("data_wait"):   # valid names stay zero-cost
+            pass
+
+    def test_span_histogram_lands_in_trace_namespace(self):
+        reg = obs.MetricsRegistry()
+        tr = obs.Tracer(reg)
+        with tr.span("pre_step"):
+            pass
+        assert reg.names() == ["trace/pre_step_s"]
+        assert obs.NAME_RE.match("trace/pre_step_s")
+
+
 # ---------------------------------------------------------------------------
 # watchdog edge cases (satellite)
 # ---------------------------------------------------------------------------
