@@ -11,8 +11,12 @@ test:
 # ops/ref contracts, thread-safety, metric-name discipline, determinism.
 # Exits non-zero on any finding not in reclint-baseline.json (policy: the
 # baseline may shrink, never grow).
+# The prometheus selfcheck renders a representative registry through the
+# text-exposition path and runs the format validator over it — the scrape
+# endpoint's contract is linted, not just unit-tested.
 lint:
 	python -m repro.analysis --baseline reclint-baseline.json src/repro
+	python -m repro.obs.prometheus --selfcheck
 
 # Full CI gate: lint + tier-1 tests + BENCH perf gate vs the committed
 # baseline snapshot (scripts/ci.sh).

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.embedding_engine import EmbeddingEngine, EngineConfig
 from repro.core.feature_engine import FeatureEngine, FeatureSpec
 from repro.io.ragged import Ragged
@@ -165,7 +166,17 @@ class E2EBench:
 
         return jax.jit(sparse_only), jax.jit(full_step)
 
-    def run(self, iters=3):
+    def run(self, iters=3, tag: str = "e2e",
+            registry: "obs.MetricsRegistry | None" = None):
+        """Time sparse-only vs overall steps under ``trace/`` spans.
+
+        Each iteration runs inside a Tracer span (``<tag>/sparse_step``,
+        ``<tag>/overall_step``) so the paper's Table-2 decomposition and
+        live training share ONE namespace (``trace/<tag>/…_s`` registry
+        histograms) — and the reported numbers are *read back from the
+        registry*, not from ad-hoc local timers."""
+        registry = registry if registry is not None else obs.MetricsRegistry()
+        tracer = obs.Tracer(registry)
         states = self._states()
         data = self.batch_data
         # warmup (compile)
@@ -173,17 +184,18 @@ class E2EBench:
         f2, _ = self.full_fn(states, data, jnp.int32(1))
         jax.block_until_ready((s2, f2))
 
-        t0 = time.perf_counter()
         for i in range(iters):
-            s2, x = self.sparse_fn(states, data, jnp.int32(i))
-        jax.block_until_ready(x)
-        sparse_t = (time.perf_counter() - t0) / iters
-
-        t0 = time.perf_counter()
+            with tracer.span(f"{tag}/sparse_step"):
+                s2, x = self.sparse_fn(states, data, jnp.int32(i))
+                jax.block_until_ready(x)
         for i in range(iters):
-            f2, loss = self.full_fn(states, data, jnp.int32(i))
-        jax.block_until_ready(loss)
-        full_t = (time.perf_counter() - t0) / iters
+            with tracer.span(f"{tag}/overall_step"):
+                f2, loss = self.full_fn(states, data, jnp.int32(i))
+                jax.block_until_ready(loss)
+        sparse_t = registry.histogram(
+            f"trace/{tag}/sparse_step_s").summary()["mean"]
+        full_t = registry.histogram(
+            f"trace/{tag}/overall_step_s").summary()["mean"]
         return {"sparse_ms": sparse_t * 1e3, "overall_ms": full_t * 1e3}
 
 
@@ -293,7 +305,11 @@ def run_autoscale(steps=400, out_dir: pathlib.Path | None = None):
     return results
 
 
-def run(models=("mse", "lma")):
+def run(models=("mse", "lma"), registry: "obs.MetricsRegistry | None" = None):
+    """All four (model × mode) decompositions fold into ONE registry under
+    ``trace/<model>_<mode>/…_s`` — the same namespace live training uses —
+    and the printed table is read back from those histograms."""
+    registry = registry if registry is not None else obs.MetricsRegistry()
     print("=" * 88)
     print("Table 2 — E2E step time (ms): RecIS-fused vs naive-unfused; "
           "sparse vs overall")
@@ -301,8 +317,10 @@ def run(models=("mse", "lma")):
     out = {}
     for name in models:
         specs = mse_specs() if name == "mse" else lma_specs()
-        fused = E2EBench(specs, merged=True).run()
-        naive = E2EBench(specs, merged=False).run()
+        fused = E2EBench(specs, merged=True).run(
+            tag=f"{name}_recis", registry=registry)
+        naive = E2EBench(specs, merged=False).run(
+            tag=f"{name}_naive", registry=registry)
         out[name] = {"recis": fused, "naive": naive}
         print(f"{name.upper():4s} naive : sparse={naive['sparse_ms']:9.2f}ms "
               f"overall={naive['overall_ms']:9.2f}ms")

@@ -39,6 +39,16 @@ STEPS = 50
 REPEATS = 3
 MICRO_N = 100_000
 
+# ns/op measured before the batched-P² drain rewrite (sequential estimator
+# update per observe). Kept in the emitted JSON so the CI gate can assert
+# the rewrite's win never silently regresses (scripts/ci.sh).
+MICRO_NS_PREV = {
+    "counter_inc_ns": 272.94,
+    "histogram_observe_ns": 10706.59,
+    "span_ns": 12939.10,
+    "jsonl_emit_ns": 7039.08,
+}
+
 
 def _steps_per_s(telemetry: bool, workdir: pathlib.Path) -> float:
     shape = ShapeCell("train_batch", "train", {"batch": 32})
@@ -98,6 +108,21 @@ def _micro() -> dict[str, float]:
             w.emit(rec)
         out["jsonl_emit_ns"] = (time.perf_counter() - t0) / n * 1e9
         w.close()
+
+    # aggregator hot path: capture → serialize → 3-way merge of a
+    # representative registry (DESIGN.md §12)
+    sreg = obs.MetricsRegistry()
+    sreg.counter("train/steps_total").inc(1000)
+    sreg.gauge("io/queue_depth").set(5.0)
+    sh = sreg.histogram("trace/device_step_s")
+    for i in range(512):
+        sh.observe(1e-3 + i * 1e-6)
+    n = 200
+    t0 = time.perf_counter()
+    for _ in range(n):
+        s = obs.RegistrySnapshot.capture(sreg, worker="w0", t=0.0)
+        obs.merge_snapshots([s, s, s]).to_json_str()
+    out["snapshot_merge3_us"] = (time.perf_counter() - t0) / n * 1e6
     return out
 
 
@@ -108,7 +133,9 @@ def run() -> dict:
     print("=" * 88)
     micro = _micro()
     for k, v in micro.items():
-        print(f"  micro {k:24s} {v:10.0f} ns/op")
+        prev = MICRO_NS_PREV.get(k)
+        delta = f"  (was {prev:.0f}, {prev / v:4.1f}x)" if prev else ""
+        print(f"  micro {k:24s} {v:10.0f} {k.rsplit('_', 1)[-1]}/op{delta}")
     with tempfile.TemporaryDirectory() as td:
         base = _steps_per_s(False, pathlib.Path(td))
         full = _steps_per_s(True, pathlib.Path(td))
@@ -125,6 +152,7 @@ def run() -> dict:
         "overhead_fraction": overhead,
         "jsonl_records": n_records,
         "micro_ns": micro,
+        "micro_ns_prev": MICRO_NS_PREV,
     }
     out_path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_obs.json"
     out_path.write_text(json.dumps(results, indent=2))

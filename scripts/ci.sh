@@ -34,4 +34,30 @@ python -m benchmarks.compare \
     BENCH_e2e_autoscale.json \
     --max-regress 40
 
+echo "== ci: obs overhead gate (BENCH_obs) =="
+# Always-on telemetry contract (DESIGN.md §9/§12): full telemetry must cost
+# < 5% of step time, and histogram.observe must stay in batched-drain
+# territory (< 4 µs/op; it was 10.7 µs before the P² drain rewrite — the
+# bound catches a silent fallback to sequential estimator updates while
+# leaving ~2.5x headroom for slow CI hosts).
+python -m benchmarks.run --only obs
+python - <<'PY'
+import json, sys
+b = json.load(open("BENCH_obs.json"))
+ov = b["overhead_fraction"]
+hist_ns = b["micro_ns"]["histogram_observe_ns"]
+prev_ns = b["micro_ns_prev"]["histogram_observe_ns"]
+errs = []
+if ov >= 0.05:
+    errs.append(f"telemetry overhead {ov:.1%} >= 5% budget")
+if hist_ns >= 4000:
+    errs.append(f"histogram_observe {hist_ns:.0f} ns/op >= 4000 ns gate "
+                f"(pre-rewrite baseline: {prev_ns:.0f} ns)")
+for e in errs:
+    print(f"obs gate FAIL: {e}")
+print(f"obs gate: overhead={ov:.2%} (<5%), "
+      f"histogram_observe={hist_ns:.0f} ns/op (<4000 ns, was {prev_ns:.0f})")
+sys.exit(1 if errs else 0)
+PY
+
 echo "== ci: all gates passed =="

@@ -193,6 +193,12 @@ def run_rules(paths: Iterable[pathlib.Path],
     if unknown:
         raise ValueError(f"unknown rule ids: {sorted(unknown)}")
     findings: list[Finding] = []
+    for rid in sorted(selected):
+        # cross-file rules (e.g. M003 mangling collisions) accumulate
+        # state across modules; give them a fresh slate per run
+        reset = getattr(registry[rid][1], "reset_run", None)
+        if reset is not None:
+            reset()
     for path in iter_py_files(paths):
         mod = load_module(path, root=root)
         if mod is None:

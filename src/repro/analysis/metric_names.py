@@ -13,6 +13,12 @@ definition of "valid name" in the repo).
         ``trace/<literal>_s`` ``check_name`` rejects — spans and metrics
         share one namespace (the Tracer folds every span into a
         ``trace/…`` histogram).
+  M003  two *different* metric literals that collide after Prometheus
+        name mangling (``obs.prometheus.mangle`` maps both ``/`` and
+        ``_`` to ``_``): ``a/b_c`` and ``a/b/c`` both scrape as
+        ``recis_a_b_c`` — two registry series silently summed by every
+        dashboard. Cross-file: the rule accumulates literals across the
+        whole run (``reset_run`` hook in core.run_rules).
 
 Only statically-evaluable strings are checked: plain literals, literal
 concatenation, and f-strings with no placeholders. Dynamic names are the
@@ -24,6 +30,7 @@ import ast
 from typing import Iterator
 
 from repro.analysis.core import Finding, Module, dotted_name, rule
+from repro.obs.prometheus import mangle
 from repro.obs.registry import check_name
 
 _REGISTRY_METHODS = {"counter", "gauge", "histogram"}
@@ -81,6 +88,31 @@ def check_metric_literals(mod: Module) -> Iterator[Finding]:
                           f"{e} (would fail at step time; fix the literal)")
 
 
+def _metric_literal_sites(mod: Module) -> Iterator[tuple[int, str]]:
+    """(line, literal) for every statically-evaluable metric name in the
+    module: registry-method / name-func sites plus span literals (which
+    become ``trace/<name>_s``)."""
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        is_span = (isinstance(node.func, ast.Attribute)
+                   and node.func.attr == "span")
+        is_site = (isinstance(node.func, ast.Attribute)
+                   and node.func.attr in _REGISTRY_METHODS) \
+            or dotted_name(node.func) in _NAME_FUNCS
+        if not (is_site or is_span):
+            continue
+        lit = _first_arg_literal(node)
+        if lit is None:
+            continue
+        name = f"trace/{lit}_s" if is_span else lit
+        try:
+            check_name(name)
+        except ValueError:
+            continue  # M001/M002 territory
+        yield node.lineno, name
+
+
 @rule("M002", "span name literal outside the trace/ metric namespace")
 def check_span_literals(mod: Module) -> Iterator[Finding]:
     for node in ast.walk(mod.tree):
@@ -99,3 +131,30 @@ def check_span_literals(mod: Module) -> Iterator[Finding]:
                 f"span name {lit!r}: trace/{lit}_s is not a valid metric "
                 "name — spans fold into trace/ histograms and share the "
                 "metric namespace")
+
+
+# mangled prometheus name → (literal, file, line) of its first sighting,
+# accumulated across the whole run (cross-file collisions are the point)
+_M003_SEEN: dict[str, tuple[str, str, int]] = {}
+
+
+@rule("M003", "metric literals collide after Prometheus name mangling")
+def check_mangling_collisions(mod: Module) -> Iterator[Finding]:
+    for line, name in sorted(_metric_literal_sites(mod)):
+        mangled = mangle(name)
+        prev = _M003_SEEN.get(mangled)
+        if prev is None:
+            _M003_SEEN[mangled] = (name, mod.rel, line)
+        elif prev[0] != name:
+            yield Finding(
+                "M003", mod.rel, line,
+                f"metric {name!r} and {prev[0]!r} ({prev[1]}:{prev[2]}) "
+                f"both mangle to {mangled!r} — the scrape endpoint would "
+                "silently merge two registry series")
+
+
+def _m003_reset():
+    _M003_SEEN.clear()
+
+
+check_mangling_collisions.reset_run = _m003_reset

@@ -64,6 +64,10 @@ class Signals:
     part_service_ewma_s: Mapping[int, float] = dataclasses.field(
         default_factory=dict)
     data_wait_p95_s: float = math.nan  # trace/data_wait_s p95 (fallback)
+    # cross-worker aggregates (obs/aggregator.py agg/io/*) — the first
+    # multi-host signal: nan/0 = no aggregator attached, purely local.
+    agg_queue_depth: float = math.nan
+    agg_queue_capacity: int = 0
 
     @property
     def wait_s(self) -> float:
@@ -72,6 +76,13 @@ class Signals:
         if not math.isnan(self.data_wait_s):
             return self.data_wait_s
         return 0.0 if math.isnan(self.data_wait_p95_s) else self.data_wait_p95_s
+
+    @property
+    def agg_queue_frac(self) -> float:
+        """Fleet-wide queue fill fraction (nan when unavailable)."""
+        if math.isnan(self.agg_queue_depth) or self.agg_queue_capacity <= 0:
+            return math.nan
+        return self.agg_queue_depth / self.agg_queue_capacity
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,6 +191,14 @@ def decide(sig: Signals, state: ControllerState,
     frac = sig.queue_depth / cap
     starving = ewma > cfg.starve_wait_s and frac <= cfg.low_queue_frac
     idle = ewma < cfg.idle_wait_s and frac >= cfg.high_queue_frac
+    # multi-host gate: when a cross-worker aggregate is present, sizing
+    # actions additionally require the FLEET queue fraction to agree —
+    # one worker's transient blip must not resize its pool while the rest
+    # of the fleet is healthy (still a pure function of the signals).
+    agg_frac = sig.agg_queue_frac
+    if not math.isnan(agg_frac):
+        starving = starving and agg_frac <= cfg.low_queue_frac
+        idle = idle and agg_frac >= cfg.high_queue_frac
     steal = _slow_reader_plan(sig, cfg)
 
     st = dataclasses.replace(
@@ -240,11 +259,15 @@ class PipelineController:
     """
 
     def __init__(self, loader, cfg: AutoscaleConfig = AutoscaleConfig(),
-                 registry: obs.MetricsRegistry | None = None):
+                 registry: obs.MetricsRegistry | None = None,
+                 aggregator=None):
         self.loader = loader
         self.cfg = cfg
         self.state = ControllerState()
         self.registry = registry if registry is not None else obs.get_registry()
+        # optional obs.TelemetryAggregator: polled at each step edge so the
+        # fleet-wide agg/io/queue_* gauges gate sizing actions (decide)
+        self.aggregator = aggregator
         reg = self.registry
         self._c_actions = reg.counter("autoscale/actions")
         self._c_kind = {k: reg.counter(f"autoscale/{k}")
@@ -261,13 +284,18 @@ class PipelineController:
         if h is not None and getattr(h, "count", 0):
             p95 = h.quantile(0.95)
         wait = math.nan if spans is None else float(spans.get("data_wait", 0.0))
+        agg_depth, agg_cap = math.nan, 0
+        if self.aggregator is not None:
+            self.aggregator.refresh()
+            agg_depth, agg_cap = self.aggregator.agg_queue()
         return Signals(
             step=step, data_wait_s=wait, data_wait_p95_s=p95,
             queue_depth=s["queue_depth"], queue_capacity=s["queue_capacity"],
             n_readers=s["n_readers"],
             reader_service_ewma_s=s["reader_service_ewma_s"],
             reader_shards=s["reader_shards"],
-            part_service_ewma_s=s["part_service_ewma_s"])
+            part_service_ewma_s=s["part_service_ewma_s"],
+            agg_queue_depth=agg_depth, agg_queue_capacity=agg_cap)
 
     def on_step(self, step: int,
                 spans: Mapping[str, float] | None = None) -> tuple[Action, ...]:

@@ -262,6 +262,9 @@ class AsyncLoader:
         self._h_read = reg.histogram("io/read_group_s")
         self._g_depth = reg.gauge("io/queue_depth")
         self._g_readers = reg.gauge("io/readers")
+        # published once: the cross-worker aggregator sums depth/capacity
+        # into agg/io/* for the autoscaler's multi-host signal
+        reg.gauge("io/queue_capacity").set(prefetch)
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
         self._lock = threading.Lock()          # readers / shard_map / EWMAs

@@ -23,6 +23,7 @@ import sys
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ShapeCell
 from repro.launch.cells import build_cell
@@ -89,7 +90,22 @@ def main(argv=None) -> int:
                    help="reader-pool floor")
     p.add_argument("--autoscale-max", type=int, default=8,
                    help="reader-pool ceiling")
+    # cross-process telemetry (DESIGN.md §12)
+    p.add_argument("--worker-id", default=None, metavar="ID",
+                   help="worker id stamped on telemetry snapshots")
+    p.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                   help="emit a mergeable registry snapshot every N steps "
+                        "(needs --telemetry; 0 = off)")
+    p.add_argument("--prometheus-port", type=int, default=None, metavar="P",
+                   help="serve GET /metrics for scraping (0 = ephemeral)")
+    p.add_argument("--aggregate", nargs="*", default=None, metavar="GLOB",
+                   help="tail peer telemetry files; publishes agg/* and "
+                        "gates the autoscaler on the fleet queue")
     args = p.parse_args(argv)
+
+    if args.snapshot_every and not args.telemetry:
+        p.error("--snapshot-every requires --telemetry (snapshots ride the "
+                "JSONL trace)")
 
     if args.autoscale and not args.data_dir:
         p.error("--autoscale requires --data-dir (nothing to scale without "
@@ -129,17 +145,30 @@ def main(argv=None) -> int:
                              prefetch=args.prefetch, loop=True)
         if args.autoscale:
             from repro.io.autoscale import AutoscaleConfig, PipelineController
+            aggregator = None
+            if args.aggregate is not None:
+                aggregator = obs.TelemetryAggregator()
+                for pat in args.aggregate:
+                    aggregator.discover(pat)
             controller = PipelineController(
                 loader, AutoscaleConfig(min_readers=args.autoscale_min,
-                                        max_readers=args.autoscale_max))
+                                        max_readers=args.autoscale_max),
+                aggregator=aggregator)
 
     tcfg = TrainConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                        ckpt_every=args.ckpt_every, resume=args.resume,
                        log_every=args.log_every,
                        telemetry_path=args.telemetry,
                        console_every=args.console_every,
-                       profile_spans=args.profile_spans)
+                       profile_spans=args.profile_spans,
+                       worker=args.worker_id,
+                       snapshot_every=args.snapshot_every)
     trainer = Trainer(cell, tcfg, controller=controller)
+    exporter = None
+    if args.prometheus_port is not None:
+        exporter = obs.PrometheusExporter(trainer.registry,
+                                          port=args.prometheus_port)
+        print(f"prometheus: serving /metrics on port {exporter.start()}")
 
     with mesh:
         state = cell.init_state()
@@ -160,6 +189,8 @@ def main(argv=None) -> int:
                           cursor_fn=cursor_fn, install_signals=True)
     if loader is not None:
         loader.stop()
+    if exporter is not None:
+        exporter.stop()
     for m in res.metrics_history[-5:]:
         print({k: round(v, 5) if isinstance(v, float) else v for k, v in m.items()})
     print(f"ran {res.steps_run} steps"

@@ -11,6 +11,15 @@ One registry, one span taxonomy, one export format:
     periodic human-readable reporting (telemetry.py).
   * ``record_mbu`` / ``record_roofline`` — fold kernel-quality numbers
     into the same namespace (mbu_bridge.py).
+  * ``RegistrySnapshot`` / ``merge_snapshots`` — versioned, mergeable
+    cross-process snapshots (merge.py, DESIGN.md §12).
+  * ``TelemetryAggregator`` — tails per-worker JSONL, merges into one
+    registry, derives ``agg/skew/<phase>`` + straggler attribution
+    (aggregator.py).
+  * ``AnomalyDetector`` — rolling median/MAD per-phase gate feeding the
+    watchdog ring buffer (anomaly.py).
+  * ``render`` / ``PrometheusExporter`` — Prometheus text exposition +
+    stdlib scrape endpoint (prometheus.py).
 
 A process-wide default registry lets far-apart components (an
 EmbeddingEngine's tiered store, an AsyncLoader thread, the Trainer) share
@@ -19,13 +28,21 @@ one sink without plumbing; tests that need isolation construct their own
 """
 from __future__ import annotations
 
+from repro.obs.aggregator import TelemetryAggregator  # noqa: F401
+from repro.obs.anomaly import AnomalyDetector  # noqa: F401
 from repro.obs.mbu_bridge import record_mbu, record_roofline  # noqa: F401
+from repro.obs.merge import (  # noqa: F401
+    SNAPSHOT_VERSION, RegistrySnapshot, merge_snapshots,
+)
+from repro.obs.prometheus import (  # noqa: F401
+    PrometheusExporter, mangle, render, validate_exposition,
+)
 from repro.obs.registry import (  # noqa: F401
     Counter, Gauge, Histogram, MetricsRegistry, NAME_RE, check_name,
     label, sanitize, span_name, valid_name,
 )
 from repro.obs.telemetry import (  # noqa: F401
-    ConsoleReporter, TelemetryWriter, read_jsonl,
+    ConsoleReporter, TelemetryWriter, read_jsonl, tail_jsonl,
 )
 from repro.obs.tracing import PHASES, StepTrace, Tracer  # noqa: F401
 

@@ -52,10 +52,19 @@ class TelemetryWriter:
         self._lock = threading.Lock()
         self._f = None
         self._size = 0
+        self._pending: list[str] = []
         self.records_written = 0
         self.path.parent.mkdir(parents=True, exist_ok=True)
 
     def _open(self):
+        # crash salvage: a killed run can leave a partial (newline-less)
+        # last line; terminate it so it stays one isolated, skippable line
+        # instead of corrupting the next appended record
+        if self.path.exists() and self.path.stat().st_size:
+            with open(self.path, "rb+") as f:
+                f.seek(-1, 2)
+                if f.read(1) != b"\n":
+                    f.write(b"\n")
         self._f = open(self.path, "a", encoding="utf-8")
         self._size = self.path.stat().st_size if self.path.exists() else 0
 
@@ -80,8 +89,19 @@ class TelemetryWriter:
             record = {**record, "t": time.time()}
         line = json.dumps(record, separators=(",", ":"),
                           default=_json_default) + "\n"
-        data = line.encode("utf-8")
         with self._lock:
+            # queue-then-drain: a record is only dropped from the queue
+            # once its bytes are flushed. If the rotation path (close /
+            # rename / reopen) raises mid-emit, the line survives in
+            # ``_pending`` and the next emit (or close) re-emits it —
+            # previously a rotation-boundary failure lost the record.
+            self._pending.append(line)
+            self._drain_locked()
+
+    def _drain_locked(self):
+        while self._pending:
+            line = self._pending[0]
+            data = line.encode("utf-8")
             if self._f is None:
                 self._open()
             if self._size and self._size + len(data) > self.max_bytes:
@@ -91,12 +111,16 @@ class TelemetryWriter:
             self._f.flush()
             self._size += len(data)
             self.records_written += 1
+            self._pending.pop(0)
 
     def close(self):
         with self._lock:
-            if self._f is not None:
-                self._f.close()
-                self._f = None
+            try:
+                self._drain_locked()  # re-emit anything a failed rotation left
+            finally:
+                if self._f is not None:
+                    self._f.close()
+                    self._f = None
 
     def __enter__(self):
         return self
@@ -105,16 +129,54 @@ class TelemetryWriter:
         self.close()
 
 
-def read_jsonl(path: str | pathlib.Path) -> list[dict]:
-    """Parse a telemetry file (tests / offline analysis)."""
+def read_jsonl(path: str | pathlib.Path, strict: bool = False) -> list[dict]:
+    """Parse a telemetry file (tests / offline analysis). Unparseable
+    lines (a salvaged crash tail) are skipped unless ``strict``."""
     out = []
     p = pathlib.Path(path)
     if not p.exists():
         return out
     for line in p.read_text().splitlines():
         if line.strip():
-            out.append(json.loads(line))
+            try:
+                out.append(json.loads(line))
+            except ValueError:
+                if strict:
+                    raise
     return out
+
+
+def tail_jsonl(path: str | pathlib.Path,
+               offset: int = 0) -> tuple[list[dict], int]:
+    """Incremental JSONL read for live aggregation (obs/aggregator.py).
+
+    Returns ``(records, new_offset)``: complete records whose bytes lie
+    after ``offset``; a partial trailing line (a record mid-write by
+    another process) is left for the next call. A file smaller than
+    ``offset`` means it was rotated/truncated underneath us — the tail
+    restarts from 0. Unparseable lines are skipped."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return [], 0
+    size = p.stat().st_size
+    if size < offset:
+        offset = 0
+    if size == offset:
+        return [], offset
+    with open(p, "rb") as f:
+        f.seek(offset)
+        data = f.read()
+    end = data.rfind(b"\n")
+    if end < 0:
+        return [], offset
+    records = []
+    for raw in data[:end + 1].splitlines():
+        if raw.strip():
+            try:
+                records.append(json.loads(raw))
+            except ValueError:
+                pass
+    return records, offset + end + 1
 
 
 class ConsoleReporter:

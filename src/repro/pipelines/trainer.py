@@ -54,6 +54,13 @@ class TrainConfig:
     telemetry_path: str | None = None  # JSONL trace destination (None = off)
     console_every: int = 0             # periodic registry report (0 = off)
     profile_spans: bool = False        # bridge spans to jax.profiler
+    # cross-process telemetry (DESIGN.md §12)
+    worker: str | None = None          # worker id stamped on snapshots
+    snapshot_every: int = 0            # emit mergeable registry snapshots
+    # per-phase rolling median/MAD anomaly gate (obs/anomaly.py)
+    anomaly: bool = True
+    anomaly_k: float = 6.0
+    anomaly_window: int = 64
 
 
 class StragglerEvent(NamedTuple):
@@ -108,6 +115,15 @@ class StragglerWatchdog:
                   for n, d in phases.items()}
         return max(excess, key=excess.get)  # type: ignore[arg-type]
 
+    def push(self, event: StragglerEvent):
+        """Append to the bounded ring buffer, counting overflow. Shared
+        entry point: the EMA gate below and the per-phase median/MAD
+        detector (obs/anomaly.py) both land events here — one place to
+        look for "what went wrong"."""
+        if len(self.events) == self.events.maxlen:
+            self.dropped += 1
+        self.events.append(event)
+
     def observe(self, step: int, dt: float,
                 phases: Mapping[str, float] | None = None) -> bool:
         self.n += 1
@@ -120,9 +136,7 @@ class StragglerWatchdog:
         thresh = self.mean + self.k * max(np.sqrt(self.var), 0.05 * self.mean)
         slow = dt > thresh
         if slow:
-            if len(self.events) == self.events.maxlen:
-                self.dropped += 1
-            self.events.append(
+            self.push(
                 StragglerEvent(step, dt, float(thresh), self.attribute(phases)))
         else:  # only non-anomalous steps update the baseline
             self.mean = (1 - self.alpha) * self.mean + self.alpha * dt
@@ -221,6 +235,20 @@ class Trainer:
                       if cfg.ckpt_dir else None)
         self.watchdog = StragglerWatchdog(cfg.watchdog_k, cfg.watchdog_warmup,
                                           max_events=cfg.watchdog_max_events)
+        self.anomaly = (obs.AnomalyDetector(
+            self.registry, window=cfg.anomaly_window, k=cfg.anomaly_k,
+            watchdog=self.watchdog, writer=self.writer)
+            if cfg.anomaly else None)
+
+    def _emit_snapshot(self, step: int):
+        """One mergeable registry snapshot record (the aggregator's input
+        unit, DESIGN.md §12)."""
+        if self.writer is None:
+            return
+        worker = self.cfg.worker or "w0"
+        snap = obs.RegistrySnapshot.capture(self.registry, worker=worker)
+        self.writer.emit({"type": "snapshot", "step": step, "worker": worker,
+                          "snapshot": snap.to_json()})
 
     # -- checkpoint glue ----------------------------------------------------
     def _save(self, state, step: int, cursor: Mapping | None, blocking=False):
@@ -327,6 +355,8 @@ class Trainer:
                     step, dt, st.spans)
                 if slow:
                     c_straggler.inc()
+                if self.anomaly is not None:
+                    self.anomaly.observe_step(step, st.spans)
                 m_scalar = {k: float(np.asarray(v)) for k, v in metrics.items()
                             if np.ndim(v) == 0}
                 st.annotate(wall_s=dt, straggler=bool(slow), metrics=m_scalar)
@@ -361,6 +391,9 @@ class Trainer:
                     self._save(state, step,
                                cursor_fn() if cursor_fn else None)
 
+                if cfg.snapshot_every and step % cfg.snapshot_every == 0:
+                    self._emit_snapshot(step)
+
             if self.reporter is not None:
                 self.reporter.maybe_report(step)
             if guard.requested:
@@ -371,6 +404,8 @@ class Trainer:
         self._save(state, step, cursor_fn() if cursor_fn else None, blocking=True)
         guard.restore()
         reg.gauge("trainer/straggler_events_dropped").set(self.watchdog.dropped)
+        if cfg.snapshot_every:
+            self._emit_snapshot(step)  # final state always lands a snapshot
         if self.writer is not None:
             self.writer.emit({"type": "summary", "steps_run": step - start_step,
                               "preempted": preempted,

@@ -301,6 +301,48 @@ class TestMetricNames:
         """)
         assert [f.rule for f in res.findings] == ["M002"]
 
+    def test_mangling_collision_same_file(self, tmp_path):
+        res = lint_snippet(tmp_path, """
+            def setup(reg):
+                reg.counter("io/rows_total")        # fine
+                reg.counter("agg/skew_x")           # first sighting
+                reg.gauge("agg/skew/x")             # M003: same mangled name
+        """, rules=["M003"])
+        assert [f.rule for f in res.findings] == ["M003"]
+        assert "recis_agg_skew_x" in res.findings[0].message
+
+    def test_mangling_collision_cross_file(self, tmp_path):
+        (tmp_path / "a.py").write_text(
+            'def f(reg):\n    reg.counter("io/rows_a")\n')
+        (tmp_path / "b.py").write_text(
+            'def g(reg):\n    reg.counter("io/rows_a")\n'   # same name: fine
+            'def h(reg):\n    reg.counter("io/rows/a")\n')  # M003 vs a.py
+        from repro.analysis import run_lint
+        res = run_lint([tmp_path], rules=["M003"], root=tmp_path)
+        assert [f.rule for f in res.findings] == ["M003"]
+        assert res.findings[0].path == "b.py"
+        assert "a.py" in res.findings[0].message
+
+    def test_mangling_collision_span_vs_histogram(self, tmp_path):
+        # a span's derived trace/<name>_s histogram can collide too
+        res = lint_snippet(tmp_path, """
+            def run(tracer, reg):
+                with tracer.span("device/step"):    # → trace/device/step_s
+                    pass
+                reg.histogram("trace/device_step_s")  # M003
+        """, rules=["M003"])
+        assert [f.rule for f in res.findings] == ["M003"]
+
+    def test_mangling_state_resets_between_runs(self, tmp_path):
+        # cross-run leakage would make the second identical run flag the
+        # same literal against its own first-run sighting
+        src = 'def f(reg):\n    reg.counter("io/rows_total")\n'
+        (tmp_path / "a.py").write_text(src)
+        from repro.analysis import run_lint
+        for _ in range(2):
+            res = run_lint([tmp_path], rules=["M003"], root=tmp_path)
+            assert res.findings == []
+
 
 # ---------------------------------------------------------------------------
 # D — determinism of decide()-reachable / simulated code

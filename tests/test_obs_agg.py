@@ -1,0 +1,669 @@
+"""Cross-process telemetry tests (DESIGN.md §12): exact dyadic merge
+algebra, snapshot (de)serialization + permutation-invariant merging,
+Prometheus exposition + validator + live scrape, the aggregator's
+straggler attribution, the anomaly gate, and writer rotation durability.
+
+The acceptance pair from the issue:
+  * N=3 worker snapshots merge bit-identically to a single-registry run,
+    under every permutation of merge order;
+  * a straggling worker is named, with its phase, in ``agg/skew/*``.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import math
+import pathlib
+import random
+import urllib.request
+
+import jax.numpy as jnp
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro import obs
+from repro.obs.merge import (RegistrySnapshot, SNAPSHOT_VERSION, dy_add,
+                             dy_encode, dy_value, merge_snapshots)
+from repro.obs.prometheus import (PrometheusExporter, mangle, mangling_table,
+                                  render, validate_exposition)
+from repro.obs.telemetry import TelemetryWriter, read_jsonl, tail_jsonl
+
+
+# ---------------------------------------------------------------------------
+# dyadic accumulator: the algebra under the merge proof
+# ---------------------------------------------------------------------------
+
+class TestDyadic:
+    def test_encode_roundtrip_exact(self):
+        for v in (0.0, -0.0, 1.0, 1.5, 0.1, -2.0 ** -60, 1e300, -3.25e-200,
+                  math.pi, 2.0 ** 53 + 2.0):
+            assert dy_value(dy_encode(v)) == v
+
+    def test_sentinels(self):
+        assert dy_encode(math.inf) == "inf"
+        assert dy_encode(-math.inf) == "-inf"
+        assert dy_encode(math.nan) == "nan"
+        assert dy_add("inf", "-inf") == "nan"
+        assert dy_add("nan", dy_encode(1.0)) == "nan"
+        assert dy_add("inf", dy_encode(-1e308)) == "inf"
+        assert math.isnan(dy_value("nan"))
+
+    def test_addition_matches_ieee_single_rounding(self):
+        # the exact dyadic sum of two doubles, rounded once, is IEEE
+        # addition (which is correctly rounded) — the float view agrees
+        for a, b in ((0.1, 0.2), (1e16, 1.0), (-5.5, 5.5), (1e-300, 1e300)):
+            assert dy_value(dy_add(dy_encode(a), dy_encode(b))) == a + b
+
+    def test_associative_commutative_fuzz(self):
+        r = random.Random(0)
+        vals = [r.uniform(-1, 1) * 10 ** r.randint(-300, 300)
+                for _ in range(300)] + [0.0, -0.0, 2.0 ** -1074, 1.8e308 / 2]
+        for _ in range(2000):
+            a, b, c = (dy_encode(r.choice(vals)) for _ in range(3))
+            ab_c = dy_add(dy_add(a, b), c)
+            a_bc = dy_add(a, dy_add(b, c))
+            assert ab_c == a_bc            # bit-identical, not approx
+            assert dy_add(a, b) == dy_add(b, a)
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.floats(allow_nan=False, allow_infinity=False),
+                    min_size=3, max_size=3))
+    def test_associativity_property(self, xs):
+        a, b, c = (dy_encode(x) for x in xs)
+        assert dy_add(dy_add(a, b), c) == dy_add(a, dy_add(b, c))
+        assert dy_add(a, b) == dy_add(b, a)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.floats(allow_nan=False))
+    def test_identity_property(self, x):
+        assert dy_add(dy_encode(x), dy_encode(0.0)) == dy_encode(x)
+
+
+# ---------------------------------------------------------------------------
+# snapshots: capture / serialize / merge / publish
+# ---------------------------------------------------------------------------
+
+def _worker_registry(seed: int, slow: float = 1.0) -> obs.MetricsRegistry:
+    """A representative worker registry; ``slow`` scales device_step."""
+    reg = obs.MetricsRegistry()
+    r = random.Random(seed)
+    reg.counter("trainer/steps").inc(100)
+    reg.counter("io/rows_total").inc(3200 + seed)
+    reg.gauge("io/queue_depth").set(float(seed + 1))
+    reg.gauge("io/queue_capacity").set(8.0)
+    dev = reg.histogram("trace/device_step_s")
+    wait = reg.histogram("trace/data_wait_s")
+    for _ in range(100):
+        dev.observe(slow * (4e-3 + r.random() * 2e-4))
+        wait.observe(1e-3 + r.random() * 1e-4)
+    return reg
+
+
+def _snap(reg, worker, t=1.0):
+    return RegistrySnapshot.capture(reg, worker=worker, t=t)
+
+
+class TestSnapshotMerge:
+    def test_merge_identity_and_single(self):
+        empty = merge_snapshots([])
+        assert empty.metrics == {} and empty.worker is None
+        s = _snap(_worker_registry(0), "w0")
+        merged = merge_snapshots([s])
+        assert merged.to_json()["metrics"] == s.to_json()["metrics"]
+        # identity element: merging with empty changes nothing
+        both = merge_snapshots([s, empty])
+        assert both.to_json()["metrics"] == s.to_json()["metrics"]
+
+    def test_json_roundtrip_bit_identical(self):
+        s = _snap(_worker_registry(1), "w1")
+        again = RegistrySnapshot.from_json(s.to_json_str())
+        assert again.to_json_str() == s.to_json_str()
+        assert again.version == SNAPSHOT_VERSION
+
+    def test_unknown_version_rejected(self):
+        s = _snap(_worker_registry(0), "w0")
+        obj = s.to_json()
+        obj["v"] = SNAPSHOT_VERSION + 1
+        with pytest.raises(ValueError, match="version"):
+            RegistrySnapshot.from_json(obj)
+
+    def test_merge_permutation_invariant_bit_identical(self):
+        """Acceptance: every association/permutation of the 3 worker
+        snapshots serializes to the same bytes."""
+        snaps = [_snap(_worker_registry(i), f"w{i}") for i in range(3)]
+        flat = merge_snapshots(snaps).to_json_str()
+        for perm in itertools.permutations(snaps):
+            assert merge_snapshots(perm).to_json_str() == flat
+            a, b, c = perm
+            left = merge_snapshots([merge_snapshots([a, b]), c])
+            right = merge_snapshots([a, merge_snapshots([b, c])])
+            assert left.to_json_str() == flat
+            assert right.to_json_str() == flat
+
+    def test_merge_matches_single_registry_run(self):
+        """Acceptance: the merged 3-worker view equals one registry that
+        saw every observation. Bit-for-bit on every field: increments are
+        dyadic-friendly (multiples of 2^-10, bounded) so the *registries'*
+        internal float accumulation is itself exact — isolating the claim
+        under test, that the merge adds nothing on top."""
+        r = random.Random(7)
+        per_worker = [[r.randrange(1, 1 << 20) * 2.0 ** -10
+                       for _ in range(257)] for _ in range(3)]
+        single = obs.MetricsRegistry()
+        parts = []
+        for w, durs in enumerate(per_worker):
+            reg = obs.MetricsRegistry()
+            for d in durs:
+                reg.histogram("trace/device_step_s").observe(d)
+                reg.counter("io/bytes_total").inc(d)       # float counter
+                single.histogram("trace/device_step_s").observe(d)
+                single.counter("io/bytes_total").inc(d)
+            parts.append(_snap(reg, f"w{w}"))
+        merged = merge_snapshots(parts)
+        ref = _snap(single, None)
+        assert merged.metrics["io/bytes_total"]["sum"] == \
+            ref.metrics["io/bytes_total"]["sum"]
+        mh = merged.metrics["trace/device_step_s"]
+        rh = ref.metrics["trace/device_step_s"]
+        for k in ("count", "sum", "min", "max", "buckets"):
+            assert mh[k] == rh[k], k
+
+    def test_merge_matches_single_registry_arbitrary_floats(self):
+        """Same shape with arbitrary floats: count/min/max/buckets stay
+        bit-identical; sums agree to the last few ulps (each registry's
+        own sequential float accumulation rounds differently — the merge
+        itself is still exact over the per-worker totals)."""
+        r = random.Random(11)
+        per_worker = [[r.uniform(1e-4, 5e-2) for _ in range(257)]
+                      for _ in range(3)]
+        single = obs.MetricsRegistry()
+        parts = []
+        for w, durs in enumerate(per_worker):
+            reg = obs.MetricsRegistry()
+            for d in durs:
+                reg.histogram("trace/device_step_s").observe(d)
+                single.histogram("trace/device_step_s").observe(d)
+            parts.append(_snap(reg, f"w{w}"))
+        mh = merge_snapshots(parts).metrics["trace/device_step_s"]
+        rh = _snap(single, None).metrics["trace/device_step_s"]
+        for k in ("count", "min", "max", "buckets"):
+            assert mh[k] == rh[k], k
+        assert dy_value(mh["sum"]) == pytest.approx(
+            dy_value(rh["sum"]), rel=1e-12)
+
+    def test_gauge_last_writer_wins(self):
+        a = obs.MetricsRegistry()
+        b = obs.MetricsRegistry()
+        a.gauge("io/queue_depth").set(3.0)
+        b.gauge("io/queue_depth").set(9.0)
+        sa, sb = _snap(a, "a", t=1.0), _snap(b, "b", t=2.0)
+        # force distinct stamps: a set later than b despite lower value
+        sa.metrics["io/queue_depth"]["t"] = 10.0
+        sb.metrics["io/queue_depth"]["t"] = 5.0
+        m = merge_snapshots([sa, sb])
+        assert m.metrics["io/queue_depth"]["value"] == 3.0
+        # ties on t deterministically prefer the larger value
+        sb.metrics["io/queue_depth"]["t"] = 10.0
+        for order in ([sa, sb], [sb, sa]):
+            assert merge_snapshots(order).metrics[
+                "io/queue_depth"]["value"] == 9.0
+
+    def test_kind_mismatch_raises(self):
+        a, b = obs.MetricsRegistry(), obs.MetricsRegistry()
+        a.counter("x/y").inc()
+        b.gauge("x/y").set(1.0)
+        with pytest.raises(ValueError, match="kind"):
+            merge_snapshots([_snap(a, "a"), _snap(b, "b")])
+
+    def test_publish_roundtrip(self):
+        src = _worker_registry(3)
+        snap = RegistrySnapshot.from_json(_snap(src, "w3").to_json_str())
+        dst = obs.MetricsRegistry()
+        snap.publish(dst)
+        assert dst.counter("trainer/steps").value == 100
+        h = dst.histogram("trace/device_step_s")
+        assert h.count == 100
+        assert h.sum == pytest.approx(
+            src.histogram("trace/device_step_s").sum)
+        # published histograms still answer quantiles (bucket fallback)
+        s = h.summary()
+        assert s["min"] <= s["p50"] <= s["p99"] <= s["max"]
+
+    def test_merged_quantiles_clamped_and_sane(self):
+        snaps = [_snap(_worker_registry(i), f"w{i}") for i in range(3)]
+        m = merge_snapshots(snaps)
+        s = m.histogram_summary("trace/device_step_s")
+        assert s["count"] == 300
+        assert s["min"] <= s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+
+
+# ---------------------------------------------------------------------------
+# prometheus exposition
+# ---------------------------------------------------------------------------
+
+class TestPrometheus:
+    def test_mangle(self):
+        assert mangle("trace/device_step_s") == "recis_trace_device_step_s"
+        assert mangle("agg/skew/data_wait") == "recis_agg_skew_data_wait"
+
+    def test_mangling_table_collision_raises(self):
+        with pytest.raises(ValueError, match="collision"):
+            mangling_table(["a/b_c", "a/b/c"])
+
+    def test_render_passes_validator(self):
+        reg = _worker_registry(0)
+        text = render(reg)
+        assert validate_exposition(text) == []
+
+    def test_exposition_roundtrip_values(self):
+        """Numbers printed on the wire parse back to the registry's state:
+        counter value, histogram count/sum, cumulative +Inf bucket."""
+        reg = _worker_registry(2)
+        samples = {}
+        for line in render(reg).splitlines():
+            if line.startswith("#") or not line.strip():
+                continue
+            key, val = line.rsplit(" ", 1)
+            samples[key] = float(val)
+        assert samples["recis_trainer_steps_total"] == 100
+        assert samples["recis_trace_device_step_s_count"] == 100
+        assert samples["recis_trace_device_step_s_sum"] == pytest.approx(
+            reg.histogram("trace/device_step_s").sum)
+        inf_bucket = samples[
+            'recis_trace_device_step_s_bucket{le="+Inf"}']
+        assert inf_bucket == 100
+
+    def test_validator_catches_breakage(self):
+        good = render(_worker_registry(0))
+        # non-cumulative +Inf bucket (count mismatch)
+        bad = good.replace('le="+Inf"} 100', 'le="+Inf"} 99')
+        assert validate_exposition(bad)
+        # sample with no TYPE declaration at all
+        assert validate_exposition("recis_orphan_total 1\n")
+        # malformed label set
+        assert validate_exposition(
+            "# TYPE recis_x gauge\nrecis_x{oops 1\n")
+
+    def test_live_scrape(self):
+        reg = _worker_registry(1)
+        exp = PrometheusExporter(reg, port=0)
+        port = exp.start()
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/metrics", timeout=10) as r:
+                body = r.read().decode()
+                assert r.status == 200
+            assert validate_exposition(body) == []
+            assert "recis_trainer_steps_total" in body
+        finally:
+            exp.stop()
+
+
+# ---------------------------------------------------------------------------
+# telemetry writer durability + incremental tailing
+# ---------------------------------------------------------------------------
+
+class TestTailJsonl:
+    def test_incremental_with_partial_line(self, tmp_path):
+        p = tmp_path / "t.jsonl"
+        p.write_bytes(b'{"a":1}\n{"a":2}\n{"a":3')   # 3rd record mid-write
+        recs, off = tail_jsonl(p, 0)
+        assert [r["a"] for r in recs] == [1, 2]
+        recs2, off2 = tail_jsonl(p, off)
+        assert recs2 == [] and off2 == off           # partial line waits
+        with open(p, "ab") as f:
+            f.write(b'}\n{"a":4}\n')
+        recs3, _ = tail_jsonl(p, off)
+        assert [r["a"] for r in recs3] == [3, 4]
+
+    def test_truncation_resets_offset(self, tmp_path):
+        p = tmp_path / "t.jsonl"
+        p.write_bytes(b'{"a":1}\n{"a":2}\n')
+        _, off = tail_jsonl(p, 0)
+        p.write_bytes(b'{"a":9}\n')                  # rotated underneath us
+        recs, off2 = tail_jsonl(p, off)
+        assert [r["a"] for r in recs] == [9]
+        assert off2 == len(b'{"a":9}\n')
+
+    def test_missing_file(self, tmp_path):
+        assert tail_jsonl(tmp_path / "nope.jsonl", 0) == ([], 0)
+
+
+class TestWriterRotationDurability:
+    def _all_records(self, path: pathlib.Path) -> list[dict]:
+        out = []
+        for back in sorted(path.parent.glob(path.name + ".*"), reverse=True):
+            out.extend(read_jsonl(back))
+        out.extend(read_jsonl(path))
+        return out
+
+    def test_no_record_lost_across_rotation(self, tmp_path):
+        p = tmp_path / "t.jsonl"
+        w = TelemetryWriter(p, max_bytes=200, max_files=9)
+        n = 20
+        for i in range(n):
+            w.emit({"type": "event", "i": i, "t": 0.0})
+        w.close()
+        recs = self._all_records(p)
+        assert [r["i"] for r in recs] == list(range(n))
+        assert w.records_written == n
+
+    def test_failed_rotation_requeues_record(self, tmp_path):
+        """Regression: a rotation-path failure used to drop the record
+        being emitted. Now it stays pending and lands on the next drain."""
+        p = tmp_path / "t.jsonl"
+        w = TelemetryWriter(p, max_bytes=120, max_files=3)
+        real_rotate = w._rotate_locked
+        boom = {"n": 1}
+
+        def flaky_rotate():
+            if boom["n"]:
+                boom["n"] -= 1
+                raise OSError("disk hiccup at the rotation boundary")
+            real_rotate()
+
+        w._rotate_locked = flaky_rotate
+        emitted = 0
+        for i in range(8):
+            try:
+                w.emit({"type": "event", "i": i, "t": 0.0})
+            except OSError:
+                pass
+            emitted += 1
+        w.close()
+        recs = self._all_records(p)
+        assert [r["i"] for r in recs] == list(range(emitted))
+        assert w.records_written == emitted
+
+    def test_crash_tail_salvaged_on_reopen(self, tmp_path):
+        p = tmp_path / "t.jsonl"
+        w = TelemetryWriter(p)
+        w.emit({"type": "event", "i": 0, "t": 0.0})
+        w.close()
+        with open(p, "ab") as f:                 # killed mid-record
+            f.write(b'{"type":"event","i":1')
+        w2 = TelemetryWriter(p)
+        w2.emit({"type": "event", "i": 2, "t": 0.0})
+        w2.close()
+        recs = read_jsonl(p)                     # salvage keeps it parseable
+        assert [r["i"] for r in recs] == [0, 2]
+        with pytest.raises(ValueError):
+            read_jsonl(p, strict=True)           # the stub is still visible
+
+
+# ---------------------------------------------------------------------------
+# aggregator: merge + skew + straggler attribution (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def three_worker_traces(tmp_path):
+    """3 workers' telemetry files; w2's device_step is 4x slower."""
+    paths = []
+    for i in range(3):
+        reg = _worker_registry(i, slow=4.0 if i == 2 else 1.0)
+        snap = _snap(reg, f"w{i}", t=float(100 + i))
+        p = tmp_path / f"w{i}.jsonl"
+        with TelemetryWriter(p) as w:
+            w.emit({"type": "step", "step": 1, "spans": {}})   # noise
+            w.emit({"type": "snapshot", "step": 100, "worker": f"w{i}",
+                    "snapshot": snap.to_json()})
+        paths.append(p)
+    return paths
+
+
+class TestAggregator:
+    def test_straggler_attributed(self, three_worker_traces):
+        agg = obs.TelemetryAggregator(three_worker_traces,
+                                      skew_threshold=1.5)
+        assert agg.poll() == 3
+        assert agg.workers == ["w0", "w1", "w2"]
+        skew = agg.skew()
+        assert skew["device_step"] == pytest.approx(4.0, rel=0.05)
+        assert skew["data_wait"] == pytest.approx(1.0, rel=0.05)
+        (culprit,) = agg.attribute()
+        assert culprit["worker"] == "w2"
+        assert culprit["phase"] == "device_step"
+        assert culprit["skew"] >= 1.5
+
+    def test_publish_agg_namespace(self, three_worker_traces):
+        agg = obs.TelemetryAggregator(three_worker_traces)
+        reg = agg.refresh()
+        assert reg.gauge("agg/workers").value == 3
+        assert reg.gauge("agg/skew/device_step").value == \
+            pytest.approx(4.0, rel=0.05)
+        # summed fleet queue: depths 1+2+3, caps 8*3
+        assert reg.gauge("agg/io/queue_depth").value == 6.0
+        assert reg.gauge("agg/io/queue_capacity").value == 24
+        # merged worker metrics republished under their own names
+        assert reg.counter("trainer/steps").value == 300
+        # per-worker labeled phase means exist
+        name = obs.label("agg/phase_mean_s/device_step", worker="w2")
+        assert reg.gauge(name).value > 0
+        # idempotent: refresh again, nothing double-counts
+        reg = agg.refresh()
+        assert reg.counter("trainer/steps").value == 300
+        # the whole aggregated registry is scrapeable
+        assert validate_exposition(render(reg)) == []
+
+    def test_incremental_poll_keeps_latest_per_worker(self, tmp_path):
+        p = tmp_path / "w0.jsonl"
+        agg = obs.TelemetryAggregator([p])
+        assert agg.poll() == 0                       # file not born yet
+        reg = obs.MetricsRegistry()
+        w = TelemetryWriter(p)
+        reg.counter("trainer/steps").inc(5)
+        w.emit({"type": "snapshot", "worker": "w0",
+                "snapshot": _snap(reg, "w0", t=1.0).to_json()})
+        assert agg.poll() == 1
+        assert agg.merged().counter_value("trainer/steps") == 5
+        reg.counter("trainer/steps").inc(5)
+        w.emit({"type": "snapshot", "worker": "w0",
+                "snapshot": _snap(reg, "w0", t=2.0).to_json()})
+        w.close()
+        assert agg.poll() == 1                       # only the new record
+        # latest snapshot replaces (not accumulates) the worker's state
+        assert agg.merged().counter_value("trainer/steps") == 10
+
+    def test_stale_snapshot_ignored(self):
+        agg = obs.TelemetryAggregator()
+        reg = obs.MetricsRegistry()
+        reg.counter("trainer/steps").inc(7)
+        new = _snap(reg, "w0", t=5.0)
+        old = _snap(obs.MetricsRegistry(), "w0", t=1.0)
+        assert agg.ingest({"type": "snapshot", "worker": "w0",
+                           "snapshot": new.to_json()})
+        assert not agg.ingest({"type": "snapshot", "worker": "w0",
+                               "snapshot": old.to_json()})
+        assert agg.merged().counter_value("trainer/steps") == 7
+
+    def test_discover_adds_late_workers(self, three_worker_traces):
+        pattern = str(three_worker_traces[0].parent / "w*.jsonl")
+        agg = obs.TelemetryAggregator()
+        assert agg.discover(pattern) == 3
+        assert agg.discover(pattern) == 0            # idempotent
+        agg.poll()
+        assert agg.workers == ["w0", "w1", "w2"]
+
+    def test_malformed_records_skipped(self):
+        agg = obs.TelemetryAggregator()
+        assert not agg.ingest({"type": "snapshot"})              # no payload
+        assert not agg.ingest({"type": "snapshot", "snapshot": {"v": 99}})
+        assert agg.workers == []
+
+
+# ---------------------------------------------------------------------------
+# anomaly gate
+# ---------------------------------------------------------------------------
+
+class _Ring:
+    def __init__(self):
+        self.events = []
+
+    def push(self, ev):
+        self.events.append(ev)
+
+
+class _Sink:
+    def __init__(self):
+        self.records = []
+
+    def emit(self, rec):
+        self.records.append(rec)
+
+
+class TestAnomalyDetector:
+    def _feed_baseline(self, det, phase="device_step", n=32, dur=1e-2):
+        for s in range(n):
+            det.observe_step(s, {phase: dur + (s % 5) * 1e-5})
+
+    def test_spike_flagged_and_routed(self):
+        reg = obs.MetricsRegistry()
+        ring, sink = _Ring(), _Sink()
+        det = obs.AnomalyDetector(reg, window=64, k=6.0, min_samples=16,
+                                  watchdog=ring, writer=sink)
+        self._feed_baseline(det)
+        out = det.observe_step(99, {"device_step": 0.5})
+        assert len(out) == 1
+        a = out[0]
+        assert a["phase"] == "device_step" and a["step"] == 99
+        assert a["dur_s"] > a["threshold_s"]
+        assert reg.counter("obs/anomaly/device_step").value == 1
+        assert reg.counter("obs/anomaly/total").value == 1
+        (ev,) = ring.events
+        assert (ev.step, ev.phase) == (99, "device_step")
+        assert sink.records[0]["event"] == "anomaly"
+
+    def test_quiet_before_min_samples(self):
+        det = obs.AnomalyDetector(obs.MetricsRegistry(), min_samples=16)
+        for s in range(15):
+            assert det.observe_step(s, {"device_step": 1e-2}) == []
+        assert det.threshold("device_step") is None
+        # even a wild value cannot fire before the baseline exists
+        assert det.observe_step(15, {"device_step": 10.0}) == []
+
+    def test_rel_floor_mutes_stable_phase_jitter(self):
+        # MAD ~ 0 on a near-constant phase; without the relative floor a
+        # 1% blip would fire
+        det = obs.AnomalyDetector(obs.MetricsRegistry(), k=6.0,
+                                  rel_floor=0.05)
+        for s in range(32):
+            det.observe_step(s, {"pre_step": 1e-2})
+        assert det.observe_step(99, {"pre_step": 1.01e-2}) == []
+        assert det.observe_step(100, {"pre_step": 5e-2})    # 5x does fire
+
+    def test_abs_floor_mutes_microsecond_phases(self):
+        det = obs.AnomalyDetector(obs.MetricsRegistry(), abs_floor_s=1e-4)
+        for s in range(32):
+            det.observe_step(s, {"post_step": 2e-6})
+        # 10x on a 2µs phase is scheduler noise, not an anomaly
+        assert det.observe_step(99, {"post_step": 2e-5}) == []
+
+    def test_rebaselines_after_regime_change(self):
+        det = obs.AnomalyDetector(obs.MetricsRegistry(), window=32,
+                                  min_samples=16, k=6.0)
+        self._feed_baseline(det, n=32, dur=1e-2)
+        fired = sum(bool(det.observe_step(100 + s, {"device_step": 0.1}))
+                    for s in range(64))
+        # the new 10x regime fires at first, then becomes the baseline
+        assert 0 < fired < 40
+        assert det.observe_step(999, {"device_step": 0.1}) == []
+
+
+# ---------------------------------------------------------------------------
+# trainer integration: snapshot records on the trace
+# ---------------------------------------------------------------------------
+
+class _FakeCell:
+    returns_state = True
+    donate_state = False
+
+    @staticmethod
+    def step_fn(state, batch):
+        return state, {"loss": jnp.float32(1.0)}
+
+
+class TestTrainerSnapshots:
+    def test_snapshot_records_emitted_and_mergeable(self, tmp_path):
+        from repro.pipelines import TrainConfig, Trainer
+
+        trace = tmp_path / "trace.jsonl"
+        tr = Trainer(_FakeCell(),
+                     TrainConfig(total_steps=9, log_every=3, watchdog=False,
+                                 telemetry_path=str(trace), worker="w7",
+                                 snapshot_every=4),
+                     registry=obs.MetricsRegistry())
+        res = tr.run({"w": jnp.zeros(())}, iter(range(9)))
+        assert res.steps_run == 9
+        recs = read_jsonl(trace)
+        snaps = [r for r in recs if r["type"] == "snapshot"]
+        # periodic at 4, 8 + the final-state snapshot
+        assert [r["step"] for r in snaps] == [4, 8, 9]
+        assert all(r["worker"] == "w7" for r in snaps)
+        last = RegistrySnapshot.from_json(snaps[-1]["snapshot"])
+        assert last.counter_value("trainer/steps") == 9
+        # the trace is aggregator-food end to end
+        agg = obs.TelemetryAggregator([trace])
+        assert agg.poll() == 3
+        assert agg.workers == ["w7"]
+        assert agg.merged().counter_value("trainer/steps") == 9
+
+    def test_snapshots_off_by_default(self, tmp_path):
+        from repro.pipelines import TrainConfig, Trainer
+
+        trace = tmp_path / "trace.jsonl"
+        tr = Trainer(_FakeCell(),
+                     TrainConfig(total_steps=4, log_every=2, watchdog=False,
+                                 telemetry_path=str(trace)),
+                     registry=obs.MetricsRegistry())
+        tr.run({"w": jnp.zeros(())}, iter(range(4)))
+        assert [r for r in read_jsonl(trace) if r["type"] == "snapshot"] == []
+
+
+# ---------------------------------------------------------------------------
+# autoscaler: fleet-queue gating (io/autoscale.Signals.agg_queue_*)
+# ---------------------------------------------------------------------------
+
+class TestAutoscaleAggGate:
+    def _sig(self, step, agg_depth=math.nan, agg_cap=0, wait=0.01, depth=0):
+        from repro.io.autoscale import Signals
+        return Signals(step=step, data_wait_s=wait, queue_depth=depth,
+                       queue_capacity=8, n_readers=2,
+                       reader_service_ewma_s={0: 0.01, 1: 0.01},
+                       reader_shards={0: (0, 2), 1: (1, 3)},
+                       part_service_ewma_s={},
+                       agg_queue_depth=agg_depth, agg_queue_capacity=agg_cap)
+
+    def _run(self, trace, cfg):
+        from repro.io.autoscale import ControllerState, decide
+        st, out = ControllerState(), []
+        for s in trace:
+            acts, st = decide(s, st, cfg)
+            out.extend(acts)
+        return out
+
+    def test_agg_frac_property(self):
+        assert math.isnan(self._sig(1).agg_queue_frac)
+        assert self._sig(1, agg_depth=6.0, agg_cap=24).agg_queue_frac == 0.25
+
+    def test_local_starve_without_aggregate_still_scales(self):
+        from repro.io.autoscale import AutoscaleConfig, ScaleUp
+        cfg = AutoscaleConfig(patience=3, cooldown_steps=5)
+        acts = self._run([self._sig(i) for i in range(1, 5)], cfg)
+        assert [type(a) for a in acts] == [ScaleUp]
+
+    def test_fleet_healthy_gates_local_starve(self):
+        from repro.io.autoscale import AutoscaleConfig
+        cfg = AutoscaleConfig(patience=3, cooldown_steps=5)
+        # locally starved but the fleet queue is 80% full: a transient
+        # local dip must not grow every worker's reader pool
+        trace = [self._sig(i, agg_depth=19.2, agg_cap=24)
+                 for i in range(1, 9)]
+        assert self._run(trace, cfg) == []
+
+    def test_fleet_starved_confirms_scale_up(self):
+        from repro.io.autoscale import AutoscaleConfig, ScaleUp
+        cfg = AutoscaleConfig(patience=3, cooldown_steps=5)
+        trace = [self._sig(i, agg_depth=2.0, agg_cap=24)
+                 for i in range(1, 5)]
+        acts = self._run(trace, cfg)
+        assert [type(a) for a in acts] == [ScaleUp]
