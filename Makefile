@@ -2,7 +2,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test lint ci bench bench-storage bench-obs bench-check
+.PHONY: test lint ci bench bench-storage bench-obs bench-ckpt bench-check
 
 test:
 	python -m pytest -x -q
@@ -31,6 +31,12 @@ bench-storage:
 
 bench-obs:
 	python -m benchmarks.run --only obs
+
+# Delta vs full checkpoint cost + recovery bit-identity (DESIGN.md §13).
+# scripts/ci.sh gates the emitted BENCH_ckpt.json: delta < 25% of full
+# bytes at <= 10% dirty rows, and diffs vs benchmarks/baselines/.
+bench-ckpt:
+	python -m benchmarks.run --only ckpt
 
 # Perf gate (DESIGN.md §10): run the autoscaler companion bench (writes
 # BENCH_e2e_fixed.json + BENCH_e2e_autoscale.json from ONE calibration),

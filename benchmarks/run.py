@@ -9,6 +9,9 @@
   autoscale pipeline-autoscaler fixed vs closed-loop (emits
           BENCH_e2e_fixed.json + BENCH_e2e_autoscale.json — DESIGN.md §10;
           gated by ``make bench-check`` via benchmarks/compare.py)
+  ckpt    delta vs full checkpoint bytes/time + recovery (emits
+          BENCH_ckpt.json — DESIGN.md §13; gated by scripts/ci.sh:
+          delta < 25% of full bytes at ≤ 10% dirty rows)
   roofline summarize dry-run roofline terms     (paper Fig. 2/3; §Roofline)
 
 Every bench folds its headline numbers into the process-wide
@@ -82,6 +85,10 @@ def main(argv=None) -> int:
         from benchmarks import table2_e2e
 
         table2_e2e.run_autoscale()
+    if "ckpt" in which or "table5" in which:
+        from benchmarks import table5_ckpt
+
+        table5_ckpt.run()
     if "roofline" in which:
         _roofline_summary()
     return 0

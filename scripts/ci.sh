@@ -1,13 +1,17 @@
 #!/usr/bin/env bash
-# CI entry point (ROADMAP: "wire the gate into CI"). Three gates, in order
-# of cost: static analysis, tier-1 tests, perf regression vs the committed
-# BENCH baseline snapshot.
+# CI entry point (ROADMAP: "wire the gate into CI"). Gates in order of
+# cost: static analysis, tier-1 tests, perf regression vs the committed
+# BENCH baseline snapshots, fault-tolerance acceptance.
 #
 #   1. make lint        — reclint (src/repro, reclint-baseline.json)
 #   2. make test        — tier-1 pytest suite
 #   3. perf gate        — regenerate BENCH_e2e_autoscale.json on this
 #                         machine, diff against the committed snapshot in
 #                         benchmarks/baselines/ with benchmarks/compare.py.
+#   4. obs gate         — telemetry overhead budget (BENCH_obs.json)
+#   5. ckpt gate        — delta-checkpoint cost bound + baseline diff
+#                         (BENCH_ckpt.json), then a CLI kill-and-resume
+#                         smoke through the chaos harness (DESIGN.md §13)
 #
 # The perf tolerance is generous (--max-regress 40): the e2e bench
 # calibrates from measured read/compute times, so absolute numbers move
@@ -59,5 +63,48 @@ print(f"obs gate: overhead={ov:.2%} (<5%), "
       f"histogram_observe={hist_ns:.0f} ns/op (<4000 ns, was {prev_ns:.0f})")
 sys.exit(1 if errs else 0)
 PY
+
+echo "== ci: ckpt gate (BENCH_ckpt: delta < 25% of full bytes) =="
+# Fault-tolerance acceptance (DESIGN.md §13): an incremental checkpoint at
+# ≤ 10% dirty rows must cost < 25% of a full snapshot, and chain recovery
+# must be bit-identical (asserted inside the bench). Bytes are
+# deterministic; times get a generous host tolerance.
+python -m benchmarks.run --only ckpt
+python - <<'PY'
+import json, sys
+b = json.load(open("BENCH_ckpt.json"))
+ratio = b["delta_over_full_bytes"]
+print(f"ckpt gate: delta/full = {ratio:.3f} at "
+      f"{b['dirty_fraction']:.0%} dirty (< 0.25 bound)")
+sys.exit(0 if ratio < 0.25 else 1)
+PY
+python -m benchmarks.compare \
+    benchmarks/baselines/BENCH_ckpt.json \
+    BENCH_ckpt.json \
+    --max-regress 50
+
+echo "== ci: ft kill-and-resume smoke =="
+# One injected crash (exit 42), then a resume that must pick the committed
+# delta chain back up — the CLI half of the chaos matrix in
+# tests/test_robustness.py.
+FT_DIR="$(mktemp -d)"
+FT_LOG="$(mktemp)"
+trap 'rm -rf "$FT_DIR" "$FT_LOG"' EXIT
+set +e
+python -m repro.launch.train --arch wide-deep --steps 12 \
+    --ckpt-dir "$FT_DIR" --ckpt-mode delta --ckpt-every 4 --log-every 4 \
+    --chaos-schedule crash@step:6 > "$FT_LOG" 2>&1
+rc=$?
+set -e
+if [ "$rc" -ne 42 ]; then
+    echo "ft smoke FAIL: expected chaos exit 42, got $rc"; cat "$FT_LOG"; exit 1
+fi
+python -m repro.launch.train --arch wide-deep --steps 12 \
+    --ckpt-dir "$FT_DIR" --ckpt-mode delta --ckpt-every 4 --log-every 4 \
+    --resume > "$FT_LOG" 2>&1
+if ! grep -q "resumed from step 4" "$FT_LOG"; then
+    echo "ft smoke FAIL: resume marker missing"; cat "$FT_LOG"; exit 1
+fi
+echo "ft smoke: crash@step:6 → exit 42 → resumed from step 4 → completed"
 
 echo "== ci: all gates passed =="

@@ -10,7 +10,8 @@ Vocabulary:
   * A **rule** is a callable ``rule(module) -> Iterator[Finding]``
     registered under a stable ID (``P001`` …). Families share a prefix
     letter: P purity, K kernel contracts, T thread-safety, M metric
-    names, D determinism.
+    names, D determinism, F fault tolerance (crash-consistent
+    persistence).
   * A **suppression** is a ``# reclint: disable=P001`` (or ``=all``)
     comment on the finding's line.
   * The **baseline** is a committed JSON list of fingerprinted findings
@@ -121,7 +122,8 @@ def all_rules() -> dict[str, tuple[str, RuleFn]]:
 def _ensure_loaded():
     # import for side effect: each module registers its rules on import
     from repro.analysis import (  # noqa: F401
-        determinism, kernel_contracts, metric_names, purity, threadsafety,
+        determinism, kernel_contracts, metric_names, persistence, purity,
+        threadsafety,
     )
 
 

@@ -1,0 +1,104 @@
+"""F-family: crash-consistent persistence in checkpoint code (DESIGN.md
+§11, §13).
+
+Applies only to modules under ``checkpoint/`` or ``ft/`` — the two
+subsystems whose files other processes recover from after a crash. There
+the write discipline is stage-and-rename (``safetensors_io.
+write_bytes_atomic``): a final path only ever holds a complete file.
+
+  F001  a direct write call — ``open(p, "w"/"wb"/"a"/…)``, ``p.open("w")``,
+        ``p.write_text(...)`` or ``p.write_bytes(...)`` — inside a
+        function that performs no ``rename``/``os.replace``. Without the
+        commit rename the write is torn-visible: a crash mid-write leaves
+        a half-file AT THE FINAL PATH, which recovery will try to read.
+
+A function that opens a temp file and renames it into place passes (the
+rename is the atomicity); intentionally-torn writes (the chaos harness)
+carry a ``# reclint: disable=F001``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Finding, Module, dotted_name, rule, walk_scoped
+
+_SCOPES = ("/checkpoint/", "/ft/")
+_WRITE_MODES = frozenset("wax+")
+
+
+def _in_scope(rel: str) -> bool:
+    return any(s in "/" + rel for s in _SCOPES)
+
+
+def _write_mode(call: ast.Call) -> bool:
+    """True when the call's mode argument is a writing mode string."""
+    mode = None
+    if len(call.args) >= 2 and isinstance(call.args[1], ast.Constant):
+        mode = call.args[1].value
+    elif len(call.args) == 1 or not call.args:
+        for kw in call.keywords:
+            if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+                mode = kw.value.value
+    if isinstance(call.func, ast.Attribute) and mode is None and \
+            len(call.args) >= 1 and isinstance(call.args[0], ast.Constant):
+        mode = call.args[0].value  # p.open("w")
+    return isinstance(mode, str) and bool(set(mode) & _WRITE_MODES)
+
+
+def _write_site(node: ast.AST) -> tuple[int, str] | None:
+    """(line, description) when ``node`` is a direct persist call."""
+    if not isinstance(node, ast.Call):
+        return None
+    f = node.func
+    if isinstance(f, ast.Name) and f.id == "open" and _write_mode(node):
+        return node.lineno, "open(..., 'w')"
+    if isinstance(f, ast.Attribute):
+        if f.attr in ("write_text", "write_bytes"):
+            return node.lineno, f".{f.attr}(...)"
+        if f.attr == "open" and dotted_name(f) != "os.open" \
+                and _write_mode(node):
+            return node.lineno, ".open(..., 'w')"
+    return None
+
+
+def _has_commit_rename(fn: ast.AST) -> bool:
+    for node in walk_scoped(fn, into_defs=False):
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name and name.split(".")[-1] in ("rename", "replace") \
+                    and name != "str.replace":
+                # os.replace / os.rename / Path.rename / Path.replace —
+                # str.replace shares the attr name; a bare `.replace` on
+                # a string would false-NEGATIVE here, which is the safe
+                # direction for a lint pass
+                if not (isinstance(node.func, ast.Attribute)
+                        and node.args and isinstance(node.args[0], ast.Constant)
+                        and isinstance(node.args[0].value, str)
+                        and len(node.args) == 2):
+                    return True
+    return False
+
+
+@rule("F001", "direct write to a final path without a commit rename")
+def check_atomic_persistence(mod: Module) -> Iterator[Finding]:
+    if not _in_scope(mod.rel):
+        return
+    funcs = [n for n in ast.walk(mod.tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in funcs:
+        sites = []
+        for node in walk_scoped(fn, into_defs=False):
+            hit = _write_site(node)
+            if hit is not None:
+                sites.append(hit)
+        if not sites or _has_commit_rename(fn):
+            continue
+        for line, what in sites:
+            yield Finding(
+                "F001", mod.rel, line,
+                f"{fn.name} persists via {what} with no rename/os.replace "
+                "in scope — a crash mid-write leaves a torn file at the "
+                "final path; stage to a temp name and commit with "
+                "os.replace (see checkpoint.safetensors_io."
+                "write_bytes_atomic)")

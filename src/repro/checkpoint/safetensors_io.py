@@ -1,10 +1,17 @@
 """Minimal pure-python SafeTensors (paper §2.1 Saver uses the format for
 checkpoints and online-serving delivery). Compatible with the official
 spec: [8B LE u64 header_len][header JSON][raw tensor bytes].
+
+Writes are always staged through a same-directory temp file and committed
+with ``os.replace`` so a crash mid-write can never leave a half-written
+file at the final path (DESIGN.md §13); ``durable=True`` additionally
+fsyncs before the rename so the commit survives power loss, not just
+process death.
 """
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import struct
 from typing import Mapping
@@ -20,8 +27,10 @@ _DT_REV = {np.dtype(v): k for k, v in _DT.items()}
 _DT_REV[np.dtype(np.uint16)] = "BF16"  # bf16 carried as uint16 payload
 
 
-def save_file(tensors: Mapping[str, np.ndarray], path: str | pathlib.Path,
-              metadata: Mapping[str, str] | None = None):
+def dumps(tensors: Mapping[str, np.ndarray],
+          metadata: Mapping[str, str] | None = None) -> bytes:
+    """Serialize to safetensors bytes (the delta layer hashes these before
+    they hit disk — manifest chain validation, DESIGN.md §13)."""
     header: dict = {}
     if metadata:
         header["__metadata__"] = dict(metadata)
@@ -44,11 +53,27 @@ def save_file(tensors: Mapping[str, np.ndarray], path: str | pathlib.Path,
     hjson = json.dumps(header, separators=(",", ":")).encode()
     pad = (8 - len(hjson) % 8) % 8
     hjson += b" " * pad
-    with open(path, "wb") as f:
-        f.write(struct.pack("<Q", len(hjson)))
-        f.write(hjson)
-        for b in blobs:
-            f.write(b)
+    return b"".join([struct.pack("<Q", len(hjson)), hjson, *blobs])
+
+
+def write_bytes_atomic(data: bytes, path: str | pathlib.Path,
+                       durable: bool = False):
+    """Stage-and-rename write: the final path only ever holds a complete
+    file. ``durable`` adds an fsync before the commit rename."""
+    path = pathlib.Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(data)
+        if durable:
+            f.flush()
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def save_file(tensors: Mapping[str, np.ndarray], path: str | pathlib.Path,
+              metadata: Mapping[str, str] | None = None,
+              durable: bool = False):
+    write_bytes_atomic(dumps(tensors, metadata), path, durable=durable)
 
 
 def load_file(path: str | pathlib.Path) -> dict[str, np.ndarray]:

@@ -11,11 +11,20 @@ onto a *different* device count just reads the overlapping byte ranges —
 elastic scaling without a conversion step. Saves go to a temp dir and are
 committed with an atomic rename; `async_save` runs the whole thing on a
 background thread (checkpoint latency hidden behind training).
+
+Crash consistency (DESIGN.md §13): every file inside the temp dir is
+written via fsync'd temp+rename, the temp dir itself is fsync'd before
+the commit rename, and an existing same-step dir is renamed ASIDE before
+the commit — never `rmtree`'d first, which would leave a window with NO
+valid checkpoint at that step. Readers (`latest_step`) only trust dirs
+that contain a ``manifest.json``, so a dir torn mid-rename is invisible;
+``_gc`` sweeps stale ``.tmp_step_*`` / ``.trash_step_*`` leftovers.
 """
 from __future__ import annotations
 
 import concurrent.futures as cf
 import json
+import os
 import pathlib
 import shutil
 import threading
@@ -74,26 +83,51 @@ def save(tree: Any, directory: str | pathlib.Path, step: int, n_shards: int = 4,
             hi = (si + 1) * n // n_shards
             tensors[k] = v[lo:hi]
         st.save_file(tensors, tmp / f"shard_{si}_of_{n_shards}.safetensors",
-                     metadata={"shard": str(si), "step": str(step)})
+                     metadata={"shard": str(si), "step": str(step)},
+                     durable=True)
 
     with cf.ThreadPoolExecutor(max_workers=max_workers) as ex:
         list(ex.map(write_shard, range(n_shards)))
     if extra_tensors:
         st.save_file({k: np.asarray(v) for k, v in extra_tensors.items()},
-                     tmp / "extra.safetensors", metadata={"step": str(step)})
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+                     tmp / "extra.safetensors", metadata={"step": str(step)},
+                     durable=True)
+    st.write_bytes_atomic(json.dumps(manifest).encode(),
+                          tmp / "manifest.json", durable=True)
+    _fsync_dir(tmp)
+    # Never rmtree the live dir before the commit rename: a crash between
+    # the two would leave NO valid checkpoint at this step. Move it aside,
+    # commit, then sweep the corpse.
+    trash = None
     if final.exists():
-        shutil.rmtree(final)
+        trash = directory / f".trash_step_{step:010d}_{time.time_ns()}"
+        final.rename(trash)
     tmp.rename(final)  # atomic commit
+    _fsync_dir(directory)
+    if trash is not None:
+        shutil.rmtree(trash, ignore_errors=True)
     if keep_last is not None:
         _gc(directory, keep_last)
     return final
 
 
+def _fsync_dir(path: pathlib.Path):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _gc(directory: pathlib.Path, keep_last: int):
-    steps = sorted(directory.glob("step_*"))
+    steps = sorted(p for p in directory.glob("step_*")
+                   if (p / "manifest.json").exists())
     for old in steps[:-keep_last]:
         shutil.rmtree(old, ignore_errors=True)
+    for junk in directory.glob(".tmp_step_*"):
+        shutil.rmtree(junk, ignore_errors=True)
+    for junk in directory.glob(".trash_step_*"):
+        shutil.rmtree(junk, ignore_errors=True)
 
 
 class AsyncSaver:
@@ -156,7 +190,10 @@ class AsyncSaver:
 
 
 def latest_step(directory: str | pathlib.Path) -> int | None:
-    steps = sorted(pathlib.Path(directory).glob("step_*"))
+    # a dir without manifest.json is not a committed checkpoint (the
+    # manifest is the last file written before the commit rename)
+    steps = sorted(p for p in pathlib.Path(directory).glob("step_*")
+                   if (p / "manifest.json").exists())
     return int(steps[-1].name.split("_")[1]) if steps else None
 
 

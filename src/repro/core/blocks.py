@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import write_log
 from repro.core.feature_engine import splitmix64
 
 
@@ -97,6 +98,7 @@ def write_rows(
     dst = jnp.where(mask, offsets, b.n_rows)  # out-of-range → dropped
     new_emb = b.emb.at[dst].set(emb, mode="drop")
     new_slots = {k: v.at[dst].set(slots[k], mode="drop") for k, v in b.slots.items()}
+    write_log.note_rows_written(mask)
     return Blocks(emb=new_emb, slots=new_slots)
 
 

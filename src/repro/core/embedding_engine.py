@@ -32,6 +32,7 @@ import numpy as np
 from repro.core import blocks as blocks_lib
 from repro.core import exchange
 from repro.core import idmap as idmap_lib
+from repro.core import write_log
 from repro.core.feature_engine import FeatureSpec, hash_combine, splitmix64
 from repro.io.ragged import Ragged
 from repro.optim.sparse_adam import SparseAdamConfig, apply_row_updates
@@ -315,8 +316,11 @@ class EmbeddingEngine:
                         np.asarray(data["last_use"])[cold])
                 if sel.size:
                     sid = jnp.asarray(ids[sel])
+                    # per-row last_use rides along (vector step), so the
+                    # restored staleness clock is bit-identical to the
+                    # writer's — eviction decisions survive a restore
                     m, offs, is_new, _ = idmap_lib.lookup_or_insert(
-                        m, sid, jnp.asarray(np.max(np.asarray(data["last_use"])[sel])))
+                        m, sid, jnp.asarray(np.asarray(data["last_use"])[sel]))
                     dst = jnp.where(is_new, offs, b.emb.shape[0])
                     emb = b.emb.at[dst].set(jnp.asarray(np.asarray(data["emb"])[sel]), mode="drop")
                     slots = {k: v.at[dst].set(jnp.asarray(np.asarray(data["slots"][k])[sel]),
@@ -378,7 +382,8 @@ class EmbeddingEngine:
             maps, n_total = [], 0
             for d in range(D):
                 m = jax.tree.map(lambda x: x[d], state[key]["idmap"])
-                m, n = idmap_lib.evict(m, jnp.int32(older_than))
+                with write_log.shard_scope(key, d):
+                    m, n = idmap_lib.evict(m, jnp.int32(older_than))
                 maps.append(m)
                 n_total += int(n)
             new_state[key] = {

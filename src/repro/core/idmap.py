@@ -31,7 +31,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import write_log
 from repro.core.feature_engine import splitmix64
 
 PAD = jnp.int64(-1)
@@ -116,7 +118,6 @@ def lookup(m: IDMap, ids: jax.Array) -> jax.Array:
     return jnp.where(found >= 0, m.offsets[jnp.maximum(found, 0)], OVERFLOW_ROW)
 
 
-@partial(jax.jit, static_argnames=())
 def lookup_or_insert(
     m: IDMap, ids: jax.Array, step: jax.Array
 ) -> tuple[IDMap, jax.Array, jax.Array, dict]:
@@ -125,7 +126,20 @@ def lookup_or_insert(
     ids: (n,) int64, unique up to PAD(-1) padding.
     offsets: (n,) int32 row in Blocks (OVERFLOW_ROW on probe exhaustion /
     row-capacity exhaustion / pad).
+
+    Thin un-jitted wrapper around the jitted probe so eager callers (the
+    tiered store's step-edge promote path) feed the write-observation seam;
+    traced callers pass straight through (`write_log` skips tracers).
     """
+    new_m, offsets, is_new, metrics = _lookup_or_insert_jit(m, ids, step)
+    write_log.note_insert(ids, is_new)
+    return new_m, offsets, is_new, metrics
+
+
+@partial(jax.jit, static_argnames=())
+def _lookup_or_insert_jit(
+    m: IDMap, ids: jax.Array, step: jax.Array
+) -> tuple[IDMap, jax.Array, jax.Array, dict]:
     cap = m.capacity
     n = ids.shape[0]
     home = _home(ids, cap)
@@ -233,6 +247,7 @@ def remove(m: IDMap, ids: jax.Array) -> tuple[IDMap, jax.Array, jax.Array]:
         n_rows=m.n_rows,
         max_probes=m.max_probes,
     )
+    write_log.note_remove(ids, found_mask)
     return new_m, jnp.where(freeable, offs, OVERFLOW_ROW), freeable
 
 
@@ -245,6 +260,10 @@ def evict(m: IDMap, older_than: jax.Array) -> tuple[IDMap, jax.Array]:
     """
     cap = m.capacity
     stale = m.occupied & (m.last_use < older_than.astype(jnp.int32))
+    if write_log.get_observer() is not None \
+            and not isinstance(stale, jax.core.Tracer):
+        # discarding evict: no surviving copy → tombstone for recovery
+        write_log.note_evict(np.asarray(m.keys)[np.asarray(stale)])
     pos = jnp.cumsum(stale.astype(jnp.int32)) - 1
     n_evicted = stale.sum(dtype=jnp.int32)
     dst = jnp.where(stale, m.free_size + pos, cap)

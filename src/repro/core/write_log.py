@@ -1,0 +1,123 @@
+"""Write-observation seam for the embedding state (DESIGN.md §13).
+
+The fault-tolerance layer needs to know *which rows changed* in each
+checkpoint interval without the core modules depending on ``repro.ft``.
+This module is that seam: core write paths (`idmap.lookup_or_insert`,
+`idmap.remove`, `idmap.evict`, `blocks.write_rows`) call the ``note_*``
+functions below, and a process-wide observer — installed by whoever owns
+checkpointing — receives (group, ids) marks.
+
+Three guards keep the seam free when unused and safe under tracing:
+
+  * no observer installed → every ``note_*`` is a cheap early return;
+  * no active :func:`shard_scope` → the write has no group attribution
+    (e.g. unit tests poking idmap directly) and is skipped;
+  * any argument is a :class:`jax.core.Tracer` → the call site is being
+    traced into a jit (values are abstract, and the traced computation
+    runs many times), so nothing is recorded.  Observation therefore only
+    happens on *eager* writes at step edges — exactly where the tiered
+    store and the trainer hooks operate.
+
+The observer protocol (see ``ft/dirty.DirtyTracker``):
+
+    mark(group, ids)          rows whose contents changed (np.int64 array)
+    mark_dead(group, ids)     rows discarded without a surviving copy
+    count_written(group, n)   monotone row-write counter (telemetry)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Protocol
+
+import jax
+import numpy as np
+
+
+class WriteObserver(Protocol):
+    def mark(self, group: str, ids: np.ndarray) -> None: ...
+    def mark_dead(self, group: str, ids: np.ndarray) -> None: ...
+    def count_written(self, group: str, n: int) -> None: ...
+
+
+_observer: WriteObserver | None = None
+_scope = threading.local()
+
+
+def set_observer(obs: WriteObserver | None) -> WriteObserver | None:
+    """Install the process-wide observer; returns the previous one."""
+    global _observer
+    prev = _observer
+    _observer = obs
+    return prev
+
+
+def get_observer() -> WriteObserver | None:
+    return _observer
+
+
+@contextlib.contextmanager
+def shard_scope(group: str, device: int = 0):
+    """Attribute eager writes inside the block to ``group`` (thread-local)."""
+    stack = getattr(_scope, "stack", None)
+    if stack is None:
+        stack = _scope.stack = []
+    stack.append((group, device))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def _current() -> tuple[str, int] | None:
+    stack = getattr(_scope, "stack", None)
+    return stack[-1] if stack else None
+
+
+def _traced(*xs: Any) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in xs)
+
+
+def note_insert(ids, is_new) -> None:
+    """After ``lookup_or_insert``: newly-admitted ids are dirty."""
+    obs, ctx = _observer, _current()
+    if obs is None or ctx is None or _traced(ids, is_new):
+        return
+    ids_np = np.asarray(ids, dtype=np.int64)
+    sel = ids_np[np.asarray(is_new, dtype=bool) & (ids_np >= 0)]
+    if sel.size:
+        obs.mark(ctx[0], sel)
+
+
+def note_remove(ids, moved) -> None:
+    """After ``idmap.remove``: rows leaving this shard (demote path) are
+    dirty — their bytes move tiers, so the next delta must carry them."""
+    obs, ctx = _observer, _current()
+    if obs is None or ctx is None or _traced(ids, moved):
+        return
+    ids_np = np.asarray(ids, dtype=np.int64)
+    sel = ids_np[np.asarray(moved, dtype=bool) & (ids_np >= 0)]
+    if sel.size:
+        obs.mark(ctx[0], sel)
+
+
+def note_evict(keys) -> None:
+    """After a discarding ``idmap.evict``: rows with no surviving copy.
+    Recorded as tombstones so recovery does not resurrect them."""
+    obs, ctx = _observer, _current()
+    if obs is None or ctx is None or _traced(keys):
+        return
+    keys_np = np.asarray(keys, dtype=np.int64)
+    keys_np = keys_np[keys_np >= 0]
+    if keys_np.size:
+        obs.mark_dead(ctx[0], keys_np)
+
+
+def note_rows_written(mask) -> None:
+    """After ``blocks.write_rows``: telemetry-only write counter."""
+    obs, ctx = _observer, _current()
+    if obs is None or ctx is None or _traced(mask):
+        return
+    n = int(np.asarray(mask, dtype=bool).sum())
+    if n:
+        obs.count_written(ctx[0], n)

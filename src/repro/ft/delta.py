@@ -1,0 +1,280 @@
+"""Incremental (base + delta) checkpoint frames (DESIGN.md §13).
+
+A **frame** is one safetensors file of embedding rows in the engine's
+``export_rows`` schema, flattened to ``<group>/ids``, ``<group>/emb``,
+``<group>/slots/<k>``, ``<group>/last_use`` (+ ``<group>/counts`` for
+tiered engines), sharded contiguously over ``n_shards`` files. Shard 0
+additionally carries the dense (non-embedding) training state under
+``__dense__/<leaf-path>`` and per-group tombstones under
+``<group>/dead`` — dense state is small next to the sparse tables, so
+it rides every frame in full and recovery just takes the newest copy.
+
+A **base** frame holds every live row; a **delta** frame holds only the
+rows the :class:`~repro.ft.dirty.DirtyTracker` marked since the previous
+save. :class:`DeltaCheckpointer` decides which to write:
+
+  * no committed chain yet                       → base
+  * chain depth would exceed ``max_chain_depth`` → base (compaction)
+  * interval dirty fraction ≥ threshold          → base (a delta would
+    approach full-snapshot cost anyway)
+  * otherwise                                    → delta
+
+Row payloads are read through ``export_rows`` / :func:`export_rows_subset`,
+which union the device and host tiers — so what lands in a frame is
+tier-independent, and recovery (``ft/recovery.py``) can re-shard it onto
+any device count via ``engine.import_rows``.
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.ft import manifest as manifest_lib
+from repro.ft import recovery as recovery_lib
+from repro.ft.dirty import DirtyInterval, DirtyTracker
+from repro.ft.manifest import FileIO, Manifest
+
+
+def flatten_tree(tree: Any) -> dict[str, np.ndarray]:
+    """Path-keyed flat view (same key scheme as the full-snapshot saver)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def unflatten_like(like: Any, flat: Mapping[str, np.ndarray]) -> Any:
+    """Rebuild ``like``'s structure from a :func:`flatten_tree` dict."""
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        val = flat.get(key)
+        assert val is not None, f"checkpoint frame missing dense leaf {key}"
+        leaf = np.asarray(leaf)
+        leaves.append(np.asarray(val).astype(leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def live_row_count(engine, state) -> int:
+    """Live rows across both tiers (denominator of the dirty fraction)."""
+    from repro.core import idmap as idmap_lib
+
+    total = 0
+    for key in engine.groups:
+        m_occ = np.asarray(state[key]["idmap"].occupied)
+        m_off = np.asarray(state[key]["idmap"].offsets)
+        total += int((m_occ & (m_off != idmap_lib.OVERFLOW_ROW)).sum())
+    if engine.storage is not None:
+        total += engine.storage.host_rows()
+    return total
+
+
+def export_rows_subset(engine, state, wanted: Mapping[str, np.ndarray]
+                       ) -> dict:
+    """``engine.export_rows`` restricted to ``wanted`` ids per group —
+    the delta-frame read. Ids found in neither tier are skipped (they
+    died this interval; the tracker reports them as tombstones)."""
+    from repro.core import idmap as idmap_lib
+
+    out = {}
+    for key in engine.groups:
+        w = np.asarray(wanted.get(key, np.zeros(0, np.int64)), np.int64)
+        m = jax.tree.map(np.asarray, state[key]["idmap"])
+        b = jax.tree.map(np.asarray, state[key]["blocks"])
+        ids, emb, slots, last = [], [], {k: [] for k in b.slots}, []
+        D = m.keys.shape[0]
+        for d in range(D):
+            occ = m.occupied[d] & (m.offsets[d] != idmap_lib.OVERFLOW_ROW)
+            if w.size:
+                occ = occ & np.isin(m.keys[d], w)
+            else:
+                occ = np.zeros_like(occ)
+            ids.append(m.keys[d][occ])
+            offs = m.offsets[d][occ]
+            emb.append(b.emb[d][offs])
+            for sk in b.slots:
+                slots[sk].append(b.slots[sk][d][offs])
+            last.append(m.last_use[d][occ])
+        if engine.storage is not None and w.size:
+            on_dev = (np.isin(w, np.concatenate(ids)) if ids
+                      else np.zeros(w.shape, bool))
+            rest = w[~on_dev]
+            found, h_emb, h_slots, h_lu = engine.storage.host[key].get(rest)
+            ids.append(rest[found])
+            emb.append(h_emb[found])
+            for sk in b.slots:
+                slots[sk].append(h_slots[sk][found])
+            last.append(h_lu[found])
+        out[key] = {
+            "ids": np.concatenate(ids) if ids else np.zeros(0, np.int64),
+            "emb": np.concatenate(emb),
+            "slots": {k: np.concatenate(v) for k, v in slots.items()},
+            "last_use": np.concatenate(last),
+        }
+        if engine.storage is not None:
+            cnt = engine.storage.counts[key]
+            out[key]["counts"] = np.fromiter(
+                (cnt.get(int(i), 1) for i in out[key]["ids"]),
+                np.int64, out[key]["ids"].size)
+    return out
+
+
+def _pack_shard(rows: Mapping[str, Mapping], dead: Mapping[str, np.ndarray],
+                dense_flat: Mapping[str, np.ndarray], si: int, n_shards: int
+                ) -> dict[str, np.ndarray]:
+    """Frame shard ``si``: a contiguous row-range of every group, plus
+    (shard 0 only) the dense state and the tombstones."""
+    tensors: dict[str, np.ndarray] = {}
+    for g, data in rows.items():
+        n = data["ids"].shape[0]
+        lo, hi = si * n // n_shards, (si + 1) * n // n_shards
+        tensors[f"{g}/ids"] = data["ids"][lo:hi]
+        tensors[f"{g}/emb"] = data["emb"][lo:hi]
+        for sk, v in data["slots"].items():
+            tensors[f"{g}/slots/{sk}"] = v[lo:hi]
+        tensors[f"{g}/last_use"] = data["last_use"][lo:hi]
+        if "counts" in data:
+            tensors[f"{g}/counts"] = data["counts"][lo:hi]
+    if si == 0:
+        for g, ids in dead.items():
+            if ids.size:
+                tensors[f"{g}/dead"] = np.asarray(ids, np.int64)
+        for k, v in dense_flat.items():
+            tensors[f"__dense__/{k}"] = v
+    return tensors
+
+
+class DeltaCheckpointer:
+    """Trainer-facing incremental checkpointer (the delta-mode counterpart
+    of ``checkpoint.AsyncSaver``). Saves are synchronous: a delta frame is
+    small by construction, and the manifest commit must be ordered with
+    respect to the tracker drain."""
+
+    def __init__(self, directory, engine, tracker: DirtyTracker, *,
+                 sparse_key: str | None = "sparse", n_shards: int = 2,
+                 max_chain_depth: int = 8,
+                 compact_dirty_fraction: float = 0.5,
+                 keep_chains: int = 2,
+                 registry: obs.MetricsRegistry | None = None,
+                 io: FileIO | None = None):
+        self.directory = pathlib.Path(directory)
+        self.directory.mkdir(parents=True, exist_ok=True)
+        self.engine = engine
+        self.tracker = tracker
+        self.sparse_key = sparse_key
+        self.n_shards = n_shards
+        self.max_chain_depth = max_chain_depth
+        self.compact_dirty_fraction = compact_dirty_fraction
+        self.keep_chains = keep_chains
+        self.io = io if io is not None else FileIO()
+        self._reg = registry if registry is not None else obs.get_registry()
+        self._c_delta_bytes = self._reg.counter("ckpt/delta_bytes")
+        self._c_base_bytes = self._reg.counter("ckpt/base_bytes")
+        self._c_frames = self._reg.counter("ckpt/frames_written")
+        self._c_compactions = self._reg.counter("ckpt/compactions")
+        self._g_dirty_frac = self._reg.gauge("ckpt/dirty_fraction")
+        self._g_depth = self._reg.gauge("ckpt/chain_depth")
+        self._g_step = self._reg.gauge("ckpt/last_saved_step")
+        self._h_save = self._reg.histogram("ckpt/delta_save_s")
+        chain = manifest_lib.load_chain(self.directory)
+        self._chain: list[Manifest] | None = chain
+        self._tip_sha = (manifest_lib.sha256(
+            (self.directory / chain[-1].name).read_bytes())
+            if chain else None)
+
+    def has_chain(self) -> bool:
+        return self._chain is not None
+
+    @property
+    def chain(self) -> list[Manifest] | None:
+        return self._chain
+
+    def _split(self, state):
+        if self.sparse_key is None:
+            return state, {}
+        return (state[self.sparse_key],
+                {k: v for k, v in state.items() if k != self.sparse_key})
+
+    def save(self, state, step: int, cursor: Mapping | None = None
+             ) -> Manifest:
+        t0 = time.perf_counter()
+        sparse, rest = self._split(state)
+        interval = self.tracker.drain()
+        live = live_row_count(self.engine, sparse)
+        frac = interval.n_dirty() / max(live, 1)
+        chain = self._chain
+        kind = "delta"
+        if chain is None or chain[-1].chain_depth + 1 > self.max_chain_depth \
+                or frac >= self.compact_dirty_fraction:
+            kind = "base"
+        try:
+            man = self._write(kind, sparse, rest, interval, step, cursor)
+        except BaseException:
+            # the drained rows are not persisted; they stay dirty so the
+            # next attempt (possibly after recovery) carries them
+            self.tracker.merge_back(interval)
+            raise
+        if kind == "base" and chain is not None:
+            self._c_compactions.inc()
+        self._chain = [man] if kind == "base" else [*chain, man]
+        self._g_dirty_frac.set(frac)
+        self._g_depth.set(man.chain_depth)
+        self._g_step.set(step)
+        self._h_save.observe(time.perf_counter() - t0)
+        manifest_lib.gc(self.directory, self.io, self.keep_chains)
+        return man
+
+    def _write(self, kind: str, sparse, rest, interval: DirtyInterval,
+               step: int, cursor: Mapping | None) -> Manifest:
+        if kind == "base":
+            rows = self.engine.export_rows(sparse)
+            dead: dict[str, np.ndarray] = {}
+        else:
+            rows = export_rows_subset(self.engine, sparse, interval.dirty)
+            dead = interval.dead
+        dense_flat = flatten_tree(rest)
+        chain = self._chain
+        seq = chain[-1].seq + 1 if chain else 1
+        frames, nbytes_total = [], 0
+        for si in range(self.n_shards):
+            name = f"{manifest_lib.FRAME_PREFIX}{seq:08d}_{si}of{self.n_shards}.safetensors"
+            tensors = _pack_shard(rows, dead, dense_flat, si, self.n_shards)
+            nbytes, digest = self.io.write_frame(
+                self.directory / name, tensors,
+                metadata={"step": str(step), "kind": kind})
+            frames.append({"file": name, "nbytes": nbytes, "sha256": digest})
+            nbytes_total += nbytes
+        man = Manifest(
+            seq=seq, step=int(step), kind=kind, frames=frames,
+            parent=chain[-1].name if chain else None,
+            parent_sha256=self._tip_sha,
+            chain_depth=0 if kind == "base" else chain[-1].chain_depth + 1,
+            cursor=dict(cursor) if cursor else None,
+            extra={"n_dirty": interval.n_dirty(), "n_dead": interval.n_dead()},
+        )
+        self._tip_sha = manifest_lib.commit(self.directory, man, self.io)
+        self._c_frames.inc(len(frames))
+        (self._c_base_bytes if kind == "base"
+         else self._c_delta_bytes).inc(nbytes_total)
+        return man
+
+    def recover(self, like_state=None) -> "recovery_lib.RecoveryResult":
+        """Replay the committed chain into this checkpointer's engine; see
+        ``ft/recovery.py``. Subsequent saves chain onto the recovered tip."""
+        res = recovery_lib.recover(self.directory, self.engine,
+                                   like_state=like_state,
+                                   sparse_key=self.sparse_key,
+                                   registry=self._reg)
+        self._chain = list(res.chain)
+        self._tip_sha = res.tip_sha
+        return res

@@ -1,0 +1,121 @@
+"""Dirty-row tracking — the "what changed this interval" half of delta
+checkpoints (DESIGN.md §13).
+
+A :class:`DirtyTracker` is the process-wide ``core.write_log`` observer
+plus the tiered store's ``dirty`` hook. Between two checkpoints it
+accumulates, per embedding group:
+
+  * **dirty** ids — rows whose bytes may differ from the last frame
+    (batch ids the jitted step updates, fresh inserts, tier moves); and
+  * **dead** ids — rows discarded with no surviving copy (a plain
+    engine's staleness evict). These become tombstones in the next delta
+    so recovery does not resurrect them from an older frame.
+
+An id is in at most one of the two sets: a write after a discard makes
+the row live again (re-insert), a discard after a write makes it dead.
+``drain()`` hands the interval to the checkpointer and resets; if the
+save fails the checkpointer merges the interval back (nothing is lost —
+the rows stay dirty for the next attempt).
+
+Thread-safe: marks arrive from the trainer thread, drains from whichever
+thread runs the checkpoint phase.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro import obs
+
+
+@dataclasses.dataclass
+class DirtyInterval:
+    """One drained checkpoint interval: sorted np.int64 id vectors."""
+
+    dirty: dict[str, np.ndarray]
+    dead: dict[str, np.ndarray]
+
+    def n_dirty(self) -> int:
+        return sum(v.size for v in self.dirty.values())
+
+    def n_dead(self) -> int:
+        return sum(v.size for v in self.dead.values())
+
+
+class DirtyTracker:
+    def __init__(self, registry: obs.MetricsRegistry | None = None):
+        self._lock = threading.Lock()
+        self._dirty: dict[str, set[int]] = {}
+        self._dead: dict[str, set[int]] = {}
+        reg = registry if registry is not None else obs.get_registry()
+        self._c_marked = reg.counter("ckpt/rows_marked_dirty")
+        self._c_written = reg.counter("ckpt/rows_written")
+        self._g_pending = reg.gauge("ckpt/dirty_pending")
+
+    # ----------------------------------------------- write_log observer API
+    def mark(self, group: str, ids: np.ndarray):
+        ids = [int(i) for i in np.asarray(ids).ravel()]
+        if not ids:
+            return
+        with self._lock:
+            d = self._dirty.setdefault(group, set())
+            before = len(d)
+            d.update(ids)
+            self._c_marked.inc(len(d) - before)
+            dead = self._dead.get(group)
+            if dead:
+                dead.difference_update(ids)
+            self._g_pending.set(self._pending_locked())
+
+    def mark_dead(self, group: str, ids: np.ndarray):
+        ids = [int(i) for i in np.asarray(ids).ravel()]
+        if not ids:
+            return
+        with self._lock:
+            self._dead.setdefault(group, set()).update(ids)
+            dirty = self._dirty.get(group)
+            if dirty:
+                dirty.difference_update(ids)
+            self._g_pending.set(self._pending_locked())
+
+    def count_written(self, group: str, n: int):
+        self._c_written.inc(int(n))
+
+    # --------------------------------------------------- checkpointer side
+    def _pending_locked(self) -> int:
+        return sum(len(s) for s in self._dirty.values())
+
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending_locked()
+
+    def drain(self) -> DirtyInterval:
+        """Take the accumulated interval and reset the tracker."""
+        with self._lock:
+            out = DirtyInterval(
+                dirty={g: np.fromiter(sorted(s), np.int64, len(s))
+                       for g, s in self._dirty.items() if s},
+                dead={g: np.fromiter(sorted(s), np.int64, len(s))
+                      for g, s in self._dead.items() if s},
+            )
+            self._dirty.clear()
+            self._dead.clear()
+            self._g_pending.set(0)
+        return out
+
+    def merge_back(self, interval: DirtyInterval):
+        """Undo a drain after a failed save: the interval's rows are still
+        unpersisted, so they must survive into the next attempt. Marks
+        recorded since the drain are NEWER than the interval and win."""
+        with self._lock:
+            for g, ids in interval.dead.items():
+                dirty = self._dirty.get(g, set())
+                self._dead.setdefault(g, set()).update(
+                    int(i) for i in ids if int(i) not in dirty)
+            for g, ids in interval.dirty.items():
+                dead = self._dead.get(g, set())
+                self._dirty.setdefault(g, set()).update(
+                    int(i) for i in ids if int(i) not in dead)
+            self._g_pending.set(self._pending_locked())

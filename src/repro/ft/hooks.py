@@ -1,0 +1,47 @@
+"""Trainer hooks for delta checkpointing on a PLAIN (non-tiered) engine.
+
+A tiered engine already has a step-edge hook object
+(``storage.StorageTrainerHooks``) whose prefetch pass sees every batch id
+eagerly — attaching the tracker there is enough. A plain engine does all
+its idmap traffic INSIDE the jitted step, where the write_log seam is
+inert by design (tracers), so this adapter recomputes the batch's engine
+ids on the host in ``pre_step`` and marks them dirty: the jitted step
+will insert/update exactly those rows.
+
+Duck-type compatible with the Trainer hook protocol and with
+``StorageTrainerHooks`` (``engine`` / ``ids_fn`` / ``state_key`` /
+``attach_tracker``), so `pipelines.Trainer` wires delta mode identically
+for both engine kinds.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+from repro.ft.dirty import DirtyTracker
+
+PAD = -1
+
+
+class FTTrainerHooks:
+    def __init__(self, engine, ids_fn: Callable[[Any], Mapping],
+                 state_key: str | None = "sparse"):
+        self.engine = engine
+        self.ids_fn = ids_fn
+        self.state_key = state_key
+        self.tracker: DirtyTracker | None = None
+
+    def attach_tracker(self, tracker: DirtyTracker) -> None:
+        self.tracker = tracker
+
+    def pre_step(self, state, batch, step: int):
+        if self.tracker is not None:
+            eng = self.engine.engine_ids(self.ids_fn(batch))
+            for g, raw in eng.items():
+                ids = np.unique(np.asarray(raw, np.int64))
+                self.tracker.mark(g, ids[ids != PAD])
+        return state, {}
+
+    def post_step(self, state, step: int):
+        return state, {}

@@ -277,14 +277,17 @@ def build(arch: ArchConfig, shape: ShapeCell, mesh, opts: CellOptions = CellOpti
                 make_batch=lambda seed: pl.make_batch(seed),
                 donate_state=opts.donate_state and train, returns_state=train)
     cell.engine = pl.engine  # public: checkpoint export/import, serving
+    # batch → {feature: Ragged} ids pytree, as the engine's fetch_local sees
+    # it — the id seam both hook kinds (storage spill/fill, ft dirty-row
+    # tracking) need to observe the step's sparse traffic on the host
+    cell.ids_fn = lambda batch: pl.prepared(_split_local(pl, batch))[0]
     if train and pl.engine.storage is not None:
         from repro.storage.integration import StorageTrainerHooks
 
         # step-edge hooks for the Trainer: host↔HBM spill/fill around the
         # jitted step + host-tier checkpointing (pass as Trainer(hooks=...))
         cell.storage_hooks = StorageTrainerHooks(
-            pl.engine, lambda batch: pl.prepared(_split_local(pl, batch))[0],
-            state_key="sparse")
+            pl.engine, cell.ids_fn, state_key="sparse")
     return cell
 
 

@@ -17,6 +17,7 @@ rebalances shards from the registry's step-edge signals.
 from __future__ import annotations
 
 import argparse
+import os
 import pathlib
 import sys
 
@@ -26,9 +27,12 @@ import numpy as np
 from repro import obs
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ShapeCell
+from repro.ft.chaos import InjectedCrash
 from repro.launch.cells import build_cell
 from repro.launch.common import CellOptions
 from repro.pipelines import TrainConfig, Trainer
+
+CHAOS_EXIT = 42  # an injected crash is "the process died here" — not an error
 
 
 def small_mesh():
@@ -51,6 +55,16 @@ def smoke_shape(arch, shape_name: str | None, batch: int, seq_len: int) -> Shape
 def make_evict_fn(cell):
     """Between-window stale-row eviction on the cell's sparse state (if any)."""
     return None  # cells fold eviction into the engine; exposed via examples
+
+
+def _with_step_chaos(stream, chaos, start: int):
+    """Fire the schedule's step events as the trainer pulls batches: the
+    batch yielded k-th becomes trainer step ``start + k``."""
+    step = start
+    for batch in stream:
+        step += 1
+        chaos.on_step(step)
+        yield batch
 
 
 def main(argv=None) -> int:
@@ -90,6 +104,15 @@ def main(argv=None) -> int:
                    help="reader-pool floor")
     p.add_argument("--autoscale-max", type=int, default=8,
                    help="reader-pool ceiling")
+    # fault tolerance (DESIGN.md §13)
+    p.add_argument("--ckpt-mode", choices=("full", "delta"), default="full",
+                   help="full = sharded snapshot saver; delta = incremental "
+                        "dirty-row frames on a crash-consistent manifest "
+                        "chain (sparse-engine archs, needs --ckpt-dir)")
+    p.add_argument("--chaos-schedule", default=None, metavar="SPEC",
+                   help="deterministic fault injection, e.g. "
+                        "'torn@frame:2,crash@manifest:3,sigterm@step:40' "
+                        f"(an injected crash exits {CHAOS_EXIT})")
     # cross-process telemetry (DESIGN.md §12)
     p.add_argument("--worker-id", default=None, metavar="ID",
                    help="worker id stamped on telemetry snapshots")
@@ -155,6 +178,27 @@ def main(argv=None) -> int:
                                         max_readers=args.autoscale_max),
                 aggregator=aggregator)
 
+    hooks = ft_io = step_chaos = None
+    if args.chaos_schedule:
+        from repro.ft import ChaosIO, ChaosSchedule, StepChaos
+        sched = ChaosSchedule.parse(args.chaos_schedule)
+        step_chaos = StepChaos(sched)
+        if args.ckpt_mode == "delta":
+            ft_io = ChaosIO(sched)
+        print(f"chaos schedule: {sched}")
+    if args.ckpt_mode == "delta":
+        if not args.ckpt_dir:
+            p.error("--ckpt-mode delta requires --ckpt-dir")
+        hooks = getattr(cell, "storage_hooks", None)
+        if hooks is None:
+            engine = getattr(cell, "engine", None)
+            ids_fn = getattr(cell, "ids_fn", None)
+            if engine is None or ids_fn is None:
+                p.error("--ckpt-mode delta needs a sparse-engine arch "
+                        "(recsys family)")
+            from repro.ft import FTTrainerHooks
+            hooks = FTTrainerHooks(engine, ids_fn, state_key="sparse")
+
     tcfg = TrainConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                        ckpt_every=args.ckpt_every, resume=args.resume,
                        log_every=args.log_every,
@@ -162,8 +206,9 @@ def main(argv=None) -> int:
                        console_every=args.console_every,
                        profile_spans=args.profile_spans,
                        worker=args.worker_id,
-                       snapshot_every=args.snapshot_every)
-    trainer = Trainer(cell, tcfg, controller=controller)
+                       snapshot_every=args.snapshot_every,
+                       ft_mode=args.ckpt_mode, ft_io=ft_io)
+    trainer = Trainer(cell, tcfg, hooks=hooks, controller=controller)
     exporter = None
     if args.prometheus_port is not None:
         exporter = obs.PrometheusExporter(trainer.registry,
@@ -183,10 +228,18 @@ def main(argv=None) -> int:
                 s += 1
 
         stream = iter(loader) if loader is not None else batches()
+        if step_chaos is not None:
+            stream = _with_step_chaos(stream, step_chaos, start)
         cursor_fn = ((lambda: loader.cursor) if loader is not None
                      else (lambda: {"part": 0, "group": 0}))
-        res = trainer.run(state, stream, start_step=start,
-                          cursor_fn=cursor_fn, install_signals=True)
+        try:
+            res = trainer.run(state, stream, start_step=start,
+                              cursor_fn=cursor_fn, install_signals=True)
+        except InjectedCrash as e:
+            # stands in for SIGKILL: nothing that would normally run on the
+            # way out (final save, GC, loader drain) may run after it
+            print(f"CHAOS: {e}", flush=True)
+            os._exit(CHAOS_EXIT)
     if loader is not None:
         loader.stop()
     if exporter is not None:

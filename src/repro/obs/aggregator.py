@@ -5,8 +5,11 @@ each worker's Trainer emits periodic ``{"type": "snapshot", "worker": …,
 "snapshot": <RegistrySnapshot>}`` records into its own JSONL telemetry
 file (``TrainConfig.snapshot_every``); the aggregator incrementally tails
 those files (``telemetry.tail_jsonl`` — byte offsets, rotation-aware,
-partial-line tolerant), keeps the *latest* snapshot per worker, and
-publishes the merged view into a global registry:
+partial-line tolerant), keeps the *latest* snapshot per ``(worker,
+epoch)`` — a preempted worker restarts with fresh (zeroed) counters and
+a new epoch (its resume step), so snapshots from different epochs are
+different streams and must SUM, not overwrite — and publishes the
+merged view into a global registry:
 
   * every worker metric, merged with obs/merge.py semantics (counters
     sum exactly, gauges last-writer, histogram buckets element-wise);
@@ -57,7 +60,9 @@ class TelemetryAggregator:
         self._lock = threading.Lock()
         self._paths: list[pathlib.Path] = []
         self._offsets: dict[pathlib.Path, int] = {}
-        self._latest: dict[str, RegistrySnapshot] = {}
+        # newest snapshot per (worker, epoch): one entry per process
+        # incarnation, merged across epochs at read time
+        self._latest: dict[tuple[str, int], RegistrySnapshot] = {}
         for p in paths:
             self.add_path(p)
 
@@ -101,17 +106,18 @@ class TelemetryAggregator:
         return n
 
     def ingest(self, record: dict, default_worker: str = "w") -> bool:
-        """Install one snapshot record; keeps the newest per worker
-        (capture stamp ``t``, arrival order breaking ties)."""
+        """Install one snapshot record; keeps the newest per (worker,
+        epoch) (capture stamp ``t``, arrival order breaking ties)."""
         try:
             snap = RegistrySnapshot.from_json(record["snapshot"])
         except (KeyError, ValueError, TypeError):
             return False
         worker = record.get("worker") or snap.worker or default_worker
+        key = (worker, snap.epoch)
         with self._lock:
-            cur = self._latest.get(worker)
+            cur = self._latest.get(key)
             if cur is None or snap.t >= cur.t:
-                self._latest[worker] = snap
+                self._latest[key] = snap
                 return True
         return False
 
@@ -120,17 +126,27 @@ class TelemetryAggregator:
     @property
     def workers(self) -> list[str]:
         with self._lock:
-            return sorted(self._latest)
+            return sorted({w for w, _e in self._latest})
 
     def merged(self) -> RegistrySnapshot:
         with self._lock:
-            snaps = [self._latest[w] for w in sorted(self._latest)]
+            snaps = [self._latest[k] for k in sorted(self._latest)]
         return merge_snapshots(snaps)
+
+    def _per_worker(self) -> list[tuple[str, RegistrySnapshot]]:
+        """One lifetime snapshot per worker: its epochs merged (counter
+        sums span restarts; gauges take the newest incarnation)."""
+        with self._lock:
+            items = sorted(self._latest.items())
+        by_worker: dict[str, list[RegistrySnapshot]] = {}
+        for (worker, _epoch), snap in items:
+            by_worker.setdefault(worker, []).append(snap)
+        return [(w, snaps[0] if len(snaps) == 1 else merge_snapshots(snaps))
+                for w, snaps in by_worker.items()]
 
     def phase_means(self) -> dict[str, dict[str, float]]:
         """{phase: {worker: mean seconds}} over ``trace/<phase>_s``."""
-        with self._lock:
-            items = sorted(self._latest.items())
+        items = self._per_worker()
         out: dict[str, dict[str, float]] = {}
         for phase in self.phases:
             name = f"trace/{phase}_s"
@@ -176,8 +192,7 @@ class TelemetryAggregator:
         workers — nan/0 when no worker reports them."""
         depth = math.nan
         cap = 0
-        with self._lock:
-            snaps = list(self._latest.values())
+        snaps = [snap for _w, snap in self._per_worker()]
         for snap in snaps:
             d = snap.metrics.get("io/queue_depth")
             if d and d["kind"] == "gauge":

@@ -23,15 +23,23 @@ with *provably* order-independent semantics:
 
 ``merge_snapshots([])`` returns the empty snapshot — the merge identity.
 
-The schema (``SNAPSHOT_VERSION`` = 1)::
+The schema (``SNAPSHOT_VERSION`` = 2)::
 
-    {"v": 1, "worker": "w0"|null, "t": <capture wall-clock>,
+    {"v": 2, "worker": "w0"|null, "epoch": <int>,
+     "t": <capture wall-clock>,
      "metrics": {
        "<name>": {"kind": "counter", "sum": [m, s]},
        "<name>": {"kind": "gauge", "value": v, "t": t},
        "<name>": {"kind": "histogram", "count": n, "sum": [m, s],
                   "min": x|null, "max": x|null,
                   "buckets": {"<idx>": n, ...}}}}
+
+v2 adds ``epoch``: a worker's process incarnation (the Trainer stamps
+its resume step). Counters reset to zero when a preempted worker
+restarts, so its pre- and post-restart snapshots are NOT successive
+views of one stream — the aggregator keeps the newest snapshot *per
+(worker, epoch)* and SUMS across epochs (DESIGN.md §13). v1 payloads
+(no epoch) read as epoch 0; merged snapshots carry the max epoch seen.
 
 Non-finite sums degrade to the IEEE string sentinels ``"inf"/"-inf"/
 "nan"`` (merge propagates them with IEEE addition semantics).
@@ -46,7 +54,8 @@ from typing import Iterable
 
 from . import registry as _reg
 
-SNAPSHOT_VERSION = 1
+SNAPSHOT_VERSION = 2
+_READABLE_VERSIONS = (1, 2)   # v1: no epoch field (reads as epoch 0)
 
 # ---------------------------------------------------------------------------
 # exact dyadic accumulator: value == m / 2**s  (m: bigint, s: int >= 0)
@@ -116,16 +125,19 @@ def _dy_load(a):
 class RegistrySnapshot:
     """Versioned, mergeable capture of a MetricsRegistry."""
 
-    __slots__ = ("version", "worker", "t", "metrics")
+    __slots__ = ("version", "worker", "t", "epoch", "metrics")
 
     def __init__(self, metrics: dict | None = None, worker: str | None = None,
-                 t: float = 0.0, version: int = SNAPSHOT_VERSION):
-        if version != SNAPSHOT_VERSION:
+                 t: float = 0.0, version: int = SNAPSHOT_VERSION,
+                 epoch: int = 0):
+        if version not in _READABLE_VERSIONS:
             raise ValueError(
                 f"snapshot version {version} != supported {SNAPSHOT_VERSION}")
-        self.version = version
+        # v1 payloads normalize to the current in-memory form (epoch 0)
+        self.version = SNAPSHOT_VERSION
         self.worker = worker
         self.t = float(t)
+        self.epoch = int(epoch)
         self.metrics: dict[str, dict] = metrics if metrics is not None else {}
 
     # -- capture ------------------------------------------------------------
@@ -133,7 +145,8 @@ class RegistrySnapshot:
     @classmethod
     def capture(cls, registry: "_reg.MetricsRegistry",
                 worker: str | None = None,
-                t: float | None = None) -> "RegistrySnapshot":
+                t: float | None = None,
+                epoch: int = 0) -> "RegistrySnapshot":
         metrics: dict[str, dict] = {}
         with registry._lock:
             items = list(registry._metrics.items())
@@ -155,13 +168,13 @@ class RegistrySnapshot:
                                 sorted(buckets.items())},
                 }
         return cls(metrics, worker=worker,
-                   t=time.time() if t is None else t)
+                   t=time.time() if t is None else t, epoch=epoch)
 
     # -- (de)serialization --------------------------------------------------
 
     def to_json(self) -> dict:
         return {"v": self.version, "worker": self.worker, "t": self.t,
-                "metrics": self.metrics}
+                "epoch": self.epoch, "metrics": self.metrics}
 
     def to_json_str(self) -> str:
         return json.dumps(self.to_json(), sort_keys=True,
@@ -194,7 +207,8 @@ class RegistrySnapshot:
                 raise ValueError(f"metric {name!r}: unknown kind {kind!r}")
         return cls(metrics, worker=obj.get("worker"),
                    t=float(obj.get("t", 0.0)),
-                   version=int(obj.get("v", -1)))
+                   version=int(obj.get("v", -1)),
+                   epoch=int(obj.get("epoch", 0)))
 
     # -- scalar views -------------------------------------------------------
 
@@ -267,11 +281,13 @@ def merge_snapshots(
     for any floats (see module docstring). Empty input → the identity."""
     out: dict[str, dict] = {}
     t = 0.0
+    epoch = 0
     workers = []
     for s in snapshots:
         if s.version != SNAPSHOT_VERSION:
             raise ValueError(f"cannot merge snapshot version {s.version}")
         t = max(t, s.t)
+        epoch = max(epoch, s.epoch)   # max-semilattice, like t
         if s.worker:
             # merged snapshots carry joined lists — re-split so nested
             # merges stay associative on the worker label too
@@ -280,4 +296,4 @@ def merge_snapshots(
             cur = out.get(name)
             out[name] = dict(e) if cur is None else _merge_entry(name, cur, e)
     worker = ",".join(sorted(set(workers))) if workers else None
-    return RegistrySnapshot(out, worker=worker, t=t)
+    return RegistrySnapshot(out, worker=worker, t=t, epoch=epoch)

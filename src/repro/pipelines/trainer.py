@@ -61,6 +61,14 @@ class TrainConfig:
     anomaly: bool = True
     anomaly_k: float = 6.0
     anomaly_window: int = 64
+    # fault tolerance (DESIGN.md §13): "delta" swaps the full-snapshot
+    # AsyncSaver for ft.DeltaCheckpointer — incremental dirty-row frames
+    # on a crash-consistent manifest chain (needs engine-bearing hooks)
+    ft_mode: str = "full"              # "full" | "delta"
+    ft_max_chain_depth: int = 8        # deltas per base before compaction
+    ft_compact_dirty_fraction: float = 0.5
+    ft_keep_chains: int = 2            # committed chains GC retains
+    ft_io: Any = None                  # ft.FileIO override (chaos harness)
 
 
 class StragglerEvent(NamedTuple):
@@ -229,29 +237,71 @@ class Trainer:
                                  profile=cfg.profile_spans)
         self.reporter = (obs.ConsoleReporter(self.registry, cfg.console_every)
                          if cfg.console_every else None)
-        self.saver = (saver_lib.AsyncSaver(cfg.ckpt_dir, cfg.n_ckpt_shards,
-                                           cfg.keep_last,
-                                           registry=self.registry)
-                      if cfg.ckpt_dir else None)
+        self.saver = None
+        self.ft = None
+        if cfg.ft_mode == "delta":
+            self._init_delta_ckpt()
+        elif cfg.ft_mode != "full":
+            raise ValueError(f"unknown ft_mode {cfg.ft_mode!r}")
+        elif cfg.ckpt_dir:
+            self.saver = saver_lib.AsyncSaver(cfg.ckpt_dir, cfg.n_ckpt_shards,
+                                              cfg.keep_last,
+                                              registry=self.registry)
         self.watchdog = StragglerWatchdog(cfg.watchdog_k, cfg.watchdog_warmup,
                                           max_events=cfg.watchdog_max_events)
         self.anomaly = (obs.AnomalyDetector(
             self.registry, window=cfg.anomaly_window, k=cfg.anomaly_k,
             watchdog=self.watchdog, writer=self.writer)
             if cfg.anomaly else None)
+        # snapshot epoch: bumped to the resume step by run() so counters
+        # from different process incarnations merge additively (§12/§13)
+        self._epoch = 0
+
+    def _init_delta_ckpt(self):
+        """ft_mode="delta": dirty-row tracking + incremental frames on a
+        crash-consistent manifest chain (DESIGN.md §13)."""
+        from repro import ft as ft_lib
+        from repro.core import write_log
+
+        cfg = self.cfg
+        engine = getattr(self.hooks, "engine", None)
+        if cfg.ckpt_dir is None or engine is None:
+            raise ValueError(
+                "ft_mode='delta' needs ckpt_dir and engine-bearing hooks "
+                "(storage.StorageTrainerHooks or ft.FTTrainerHooks)")
+        tracker = ft_lib.DirtyTracker(registry=self.registry)
+        if hasattr(self.hooks, "attach_tracker"):
+            self.hooks.attach_tracker(tracker)
+        write_log.set_observer(tracker)
+        self.ft = ft_lib.DeltaCheckpointer(
+            cfg.ckpt_dir, engine, tracker,
+            sparse_key=getattr(self.hooks, "state_key", "sparse"),
+            n_shards=cfg.n_ckpt_shards,
+            max_chain_depth=cfg.ft_max_chain_depth,
+            compact_dirty_fraction=cfg.ft_compact_dirty_fraction,
+            keep_chains=cfg.ft_keep_chains,
+            registry=self.registry, io=cfg.ft_io)
 
     def _emit_snapshot(self, step: int):
         """One mergeable registry snapshot record (the aggregator's input
-        unit, DESIGN.md §12)."""
+        unit, DESIGN.md §12). The epoch distinguishes this process
+        incarnation from pre-restart ones (counters reset at a resume, so
+        the aggregator must SUM epochs, not take the newest)."""
         if self.writer is None:
             return
         worker = self.cfg.worker or "w0"
-        snap = obs.RegistrySnapshot.capture(self.registry, worker=worker)
+        snap = obs.RegistrySnapshot.capture(self.registry, worker=worker,
+                                            epoch=self._epoch)
         self.writer.emit({"type": "snapshot", "step": step, "worker": worker,
                           "snapshot": snap.to_json()})
 
     # -- checkpoint glue ----------------------------------------------------
     def _save(self, state, step: int, cursor: Mapping | None, blocking=False):
+        if self.ft is not None:
+            with self.tracer.span("checkpoint"):
+                self.ft.save(state, step,
+                             cursor={"part": 0, "group": 0, **(cursor or {})})
+            return
         if self.saver is None:
             return
         with self.tracer.span("checkpoint"):
@@ -266,9 +316,17 @@ class Trainer:
                 self.saver.wait()
 
     def try_resume(self, init_state) -> tuple[Any, int, Mapping | None]:
-        """→ (state, start_step, data_cursor). Falls back to fresh init."""
+        """→ (state, start_step, data_cursor). Falls back to fresh init.
+
+        Idempotent: resuming twice from the same chain/checkpoint yields
+        the same (state, step) — recovery never mutates the chain."""
         if not (self.cfg.ckpt_dir and self.cfg.resume):
             return init_state, 0, None
+        if self.ft is not None:
+            if not self.ft.has_chain():
+                return init_state, 0, None
+            res = self.ft.recover(like_state=init_state)
+            return res.state, int(res.step), res.cursor
         step = saver_lib.latest_step(self.cfg.ckpt_dir)
         if step is None:
             return init_state, 0, None
@@ -313,6 +371,7 @@ class Trainer:
         step = start_step
         preempted = False
         resumed_from = start_step if start_step else None
+        self._epoch = start_step
         it = iter(batches)
         c_steps = reg.counter("trainer/steps")
         c_straggler = reg.counter("trainer/straggler_events")

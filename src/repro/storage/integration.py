@@ -51,6 +51,11 @@ class StorageTrainerHooks:
         self.ids_fn = ids_fn
         self.state_key = state_key
 
+    def attach_tracker(self, tracker) -> None:
+        """Delta-checkpoint wiring (DESIGN.md §13): the store's prefetch
+        marks every batch id dirty, tier moves mark via ``core.write_log``."""
+        self.engine.storage.dirty = tracker
+
     def pre_step(self, state, batch, step: int):
         sub, met = self.engine.storage_prefetch(
             _get(state, self.state_key), self.ids_fn(batch), step)

@@ -38,6 +38,7 @@ import numpy as np
 from repro import obs
 from repro.core import blocks as blocks_lib
 from repro.core import idmap as idmap_lib
+from repro.core import write_log
 from repro.core.exchange import _owner_of
 from repro.storage.host_store import HostStore
 from repro.storage.policies import CachePolicy, make_policy
@@ -149,6 +150,10 @@ class TieredEmbeddingStore:
         self._g_host = reg.gauge("storage/host_rows")
         self._g_device = reg.gauge("storage/device_rows")
         self._g_hit = reg.gauge("storage/hit_rate")
+        # optional ft.DirtyTracker (DESIGN.md §13): prefetch marks every
+        # batch id dirty (the jitted step will update those rows); tier
+        # moves mark via the write_log seam inside shard_scope below
+        self.dirty = None
 
     # --------------------------------------------------------------- helpers
     def _owner_np(self, ids: np.ndarray) -> np.ndarray:
@@ -201,7 +206,8 @@ class TieredEmbeddingStore:
         """Move rows device→host (spill), preserving emb + slots."""
         m, b = sv.get()
         pids = _pad_pow2(victim_ids)
-        m2, offs, found = idmap_lib.remove(m, jnp.asarray(pids))
+        with write_log.shard_scope(g, sv.d):
+            m2, offs, found = idmap_lib.remove(m, jnp.asarray(pids))
         emb, slots = blocks_lib.gather_with_slots(b, offs)
         b2 = blocks_lib.clear_rows(b, offs, found)
         sv.put(m2, b2)
@@ -225,16 +231,19 @@ class TieredEmbeddingStore:
         insert); the rest stay host-resident."""
         m, b = sv.get()
         pids = _pad_pow2(ids)
-        m2, offs, _is_new, _ = idmap_lib.lookup_or_insert(
-            m, jnp.asarray(pids), jnp.int32(step))
-        found, emb, slots, _lu = self.host[g].get(ids)
-        offs_np = np.asarray(offs)
-        ok = np.zeros((pids.size,), np.bool_)
-        ok[: ids.size] = found & (offs_np[: ids.size] != idmap_lib.OVERFLOW_ROW)
-        b2 = blocks_lib.write_rows(
-            b, offs, jnp.asarray(_pad_rows(emb, pids.size)),
-            {k: jnp.asarray(_pad_rows(v, pids.size)) for k, v in slots.items()},
-            jnp.asarray(ok))
+        with write_log.shard_scope(g, sv.d):
+            m2, offs, _is_new, _ = idmap_lib.lookup_or_insert(
+                m, jnp.asarray(pids), jnp.int32(step))
+            found, emb, slots, _lu = self.host[g].get(ids)
+            offs_np = np.asarray(offs)
+            ok = np.zeros((pids.size,), np.bool_)
+            ok[: ids.size] = found & (offs_np[: ids.size]
+                                      != idmap_lib.OVERFLOW_ROW)
+            b2 = blocks_lib.write_rows(
+                b, offs, jnp.asarray(_pad_rows(emb, pids.size)),
+                {k: jnp.asarray(_pad_rows(v, pids.size))
+                 for k, v in slots.items()},
+                jnp.asarray(ok))
         sv.put(m2, b2)
         landed = ids[ok[: ids.size]]
         self.host[g].remove(landed)  # exclusive hierarchy: promotion is a move
@@ -273,6 +282,8 @@ class TieredEmbeddingStore:
                 miss = sids[~in_res]
                 self._bump(met, "lookups", d, int(sids.size))
                 self._bump(met, "hits", d, int(sids.size - miss.size))
+                if self.dirty is not None:
+                    self.dirty.mark(g, sids)
                 sv = _ShardView(state_g, d)
                 placeable = miss
                 if miss.size:

@@ -1,0 +1,152 @@
+"""Shared fake-train harness for the fault-tolerance suite (DESIGN.md §13).
+
+Drives a tiny EmbeddingEngine through an EAGER, fully deterministic
+training loop — ``fetch_local``/``update_local`` on the shard-0 slice,
+batch ids a pure function of the step number — marking batch ids dirty
+exactly the way ``ft.hooks.FTTrainerHooks.pre_step`` does. Chaos runs
+restart this loop after every injected crash; because the id stream is
+scripted, one uninterrupted reference run provides the bit-exact
+expected state at every step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core.embedding_engine import EmbeddingEngine, EngineConfig
+from repro.core.feature_engine import FeatureSpec
+from repro.ft import DeltaCheckpointer, DirtyTracker, InjectedCrash
+from repro.io.ragged import Ragged
+from repro.optim.sparse_adam import SparseAdamConfig
+
+GROUP = "dim4"
+PAD = -1
+
+
+def build_engine(n_devices=1, rows_per_shard=128):
+    specs = [FeatureSpec("f", transform="hash", emb_dim=4, pooling="sum")]
+    return EmbeddingEngine(specs, EngineConfig(
+        mesh_axes=(), n_devices=n_devices, rows_per_shard=rows_per_shard,
+        map_capacity_per_shard=2 * rows_per_shard, u_budget=32,
+        per_dest_cap=32, recv_budget=32))
+
+
+def batch_ids(step: int, universe: int = 60, k: int = 5) -> list[int]:
+    """Scripted batch: a pure function of the step number."""
+    r = np.random.default_rng(1000 + step)
+    return [int(i) for i in r.integers(0, universe, size=k)]
+
+
+class FakeTrainer:
+    """Eager single-shard train loop with deterministic per-step batches."""
+
+    def __init__(self, engine, tracker=None):
+        self.engine = engine
+        self.tracker = tracker
+        self.state = engine.init_state()
+        self.opt = SparseAdamConfig(lr=0.1)
+        self.step = 0
+
+    def train_step(self):
+        self.step += 1
+        ids = {"f": Ragged.from_lists([batch_ids(self.step)], nnz_budget=8)}
+        if self.tracker is not None:  # what FTTrainerHooks.pre_step does
+            for g, raw in self.engine.engine_ids(ids).items():
+                u = np.unique(np.asarray(raw, np.int64))
+                self.tracker.mark(g, u[u != PAD])
+        stl = jax.tree.map(lambda x: x[0], self.state)
+        stl, rows_r, plans, _ = self.engine.fetch_local(
+            stl, ids, jnp.int32(self.step))
+        grads = {k: jnp.ones_like(v) for k, v in rows_r.items()}
+        stl = self.engine.update_local(stl, plans, grads, self.opt,
+                                       jnp.int32(self.step))
+        self.state = jax.tree.map(lambda a, b: a.at[0].set(b),
+                                  self.state, stl)
+
+    def full_state(self):
+        """Trainer-shaped state: sparse tables + step-dependent dense leaves,
+        so recovery of the dense side is checkable per step."""
+        return {"sparse": self.state,
+                "dense": {"w": np.full((3,), float(self.step), np.float32)},
+                "step": np.int64(self.step)}
+
+    def adopt(self, res):
+        """Resume from a RecoveryResult (what Trainer.try_resume does)."""
+        self.state = res.state["sparse"]
+        self.step = res.step
+
+
+def assert_rows_equal(a, b):
+    """Bit-exact export_rows equality, order-insensitive (argsort by id)."""
+    assert set(a) == set(b)
+    for g in a:
+        ra, rb = a[g], b[g]
+        oa, ob = np.argsort(ra["ids"]), np.argsort(rb["ids"])
+        np.testing.assert_array_equal(ra["ids"][oa], rb["ids"][ob])
+        np.testing.assert_array_equal(ra["emb"][oa], rb["emb"][ob])
+        np.testing.assert_array_equal(ra["last_use"][oa], rb["last_use"][ob])
+        assert set(ra["slots"]) == set(rb["slots"])
+        for k in ra["slots"]:
+            np.testing.assert_array_equal(ra["slots"][k][oa],
+                                          rb["slots"][k][ob])
+
+
+def reference_run(total_steps: int) -> dict[int, dict]:
+    """Uninterrupted run; returns {step: export_rows snapshot}."""
+    tr = FakeTrainer(build_engine())
+    snaps = {0: tr.engine.export_rows(tr.state)}
+    for _ in range(total_steps):
+        tr.train_step()
+        snaps[tr.step] = tr.engine.export_rows(tr.state)
+    return snaps
+
+
+def run_chaos(directory, io, total_steps=12, save_every=2, *,
+              max_chain_depth=2, n_shards=2, ref=None, max_sessions=32):
+    """Run the fake train loop to completion under an injected-crash IO,
+    restarting after every crash. A restart models a fresh process — new
+    engine, tracker, checkpointer; only ``io`` (the "disk" plus its
+    lifetime crash counters) survives.
+
+    When ``ref`` (a :func:`reference_run` dict) is given, every recovery
+    is checked bit-identical against the reference at the recovered step
+    — the §13 invariant, at every crash point of the schedule.
+
+    Returns (recovered_steps, attempts, final_trainer) where attempts is
+    [(save_step, "ok"|"crashed", was_compaction), ...].
+    """
+    recovered_steps, attempts = [], []
+    for _ in range(max_sessions):
+        tracker = DirtyTracker(registry=obs.MetricsRegistry())
+        tr = FakeTrainer(build_engine(), tracker)
+        ck = DeltaCheckpointer(
+            directory, tr.engine, tracker, n_shards=n_shards,
+            max_chain_depth=max_chain_depth, compact_dirty_fraction=2.0,
+            registry=obs.MetricsRegistry(), io=io)
+        if ck.has_chain():
+            res = ck.recover(like_state=tr.full_state())
+            tr.adopt(res)
+            recovered_steps.append(res.step)
+            if ref is not None:
+                assert_rows_equal(tr.engine.export_rows(tr.state),
+                                  ref[res.step])
+                np.testing.assert_array_equal(
+                    res.state["dense"]["w"],
+                    np.full((3,), float(res.step), np.float32))
+                assert int(res.state["step"]) == res.step
+        try:
+            for s in range(tr.step + 1, total_steps + 1):
+                tr.train_step()
+                if s % save_every == 0:
+                    compacting = (ck.has_chain() and ck.chain[-1].chain_depth
+                                  + 1 > max_chain_depth)
+                    try:
+                        ck.save(tr.full_state(), s)
+                        attempts.append((s, "ok", compacting))
+                    except InjectedCrash:
+                        attempts.append((s, "crashed", compacting))
+                        raise
+            return recovered_steps, attempts, tr
+        except InjectedCrash:
+            continue
+    raise AssertionError("chaos run did not converge within max_sessions")

@@ -391,6 +391,81 @@ class TestDeterminism:
 
 
 # ---------------------------------------------------------------------------
+# F — crash-consistent persistence (checkpoint/ and ft/ only)
+# ---------------------------------------------------------------------------
+
+class TestPersistence:
+    def test_bare_write_in_checkpoint_module_flags(self, tmp_path):
+        res = lint_snippet(tmp_path, """
+            import json
+
+            def save_manifest(man, path):
+                with open(path, "w") as f:
+                    json.dump(man, f)
+
+            def save_head(path, text):
+                path.write_text(text)
+
+            def save_blob(path, data):
+                path.write_bytes(data)
+        """, name="checkpoint/mod.py", rules=["F001"])
+        assert [f.rule for f in res.findings] == ["F001"] * 3
+        assert "torn file" in res.findings[0].message
+
+    def test_stage_and_rename_passes(self, tmp_path):
+        res = lint_snippet(tmp_path, """
+            import os
+
+            def write_atomic(data, path):
+                tmp = path.with_name(path.name + ".tmp")
+                with open(tmp, "wb") as f:
+                    f.write(data)
+                os.replace(tmp, path)
+
+            def write_via_rename(data, path):
+                tmp = path.with_name(path.name + ".tmp")
+                tmp.write_bytes(data)
+                tmp.rename(path)
+        """, name="ft/mod.py", rules=["F001"])
+        assert res.findings == []
+
+    def test_reads_and_out_of_scope_modules_exempt(self, tmp_path):
+        # reads never flag, and the same torn write outside checkpoint/
+        # or ft/ is out of the rule's jurisdiction
+        read_only = """
+            def load(path):
+                with open(path, "rb") as f:
+                    return f.read()
+
+            def fix_name(s):
+                return s.replace("a", "b")
+        """
+        assert lint_snippet(tmp_path, read_only, name="ft/reader.py",
+                            rules=["F001"]).findings == []
+        torn = """
+            def dump(path, data):
+                with open(path, "wb") as f:
+                    f.write(data)
+        """
+        assert lint_snippet(tmp_path, torn, name="io/writer.py",
+                            rules=["F001"]).findings == []
+
+    def test_suppression_comment_respected(self, tmp_path):
+        res = lint_snippet(tmp_path, """
+            def torn_on_purpose(path, data):
+                with open(path, "wb") as f:  # reclint: disable=F001
+                    f.write(data[: len(data) // 2])
+        """, name="ft/chaos_mod.py", rules=["F001"])
+        assert res.findings == []
+
+    def test_live_checkpoint_and_ft_trees_are_clean(self):
+        res = run_lint([REPO / "src" / "repro" / "checkpoint",
+                        REPO / "src" / "repro" / "ft"],
+                       rules=["F001"], root=REPO)
+        assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
 # baseline + CLI + acceptance
 # ---------------------------------------------------------------------------
 
@@ -433,7 +508,7 @@ class TestBaselineAndCli:
 
     def test_rule_catalog_covers_all_families(self):
         ids = set(all_rules())
-        assert {i[0] for i in ids} == {"P", "K", "T", "M", "D"}
+        assert {i[0] for i in ids} == {"P", "K", "T", "M", "D", "F"}
         assert len(ids) >= 10
 
     def test_unknown_rule_id_raises(self, tmp_path):

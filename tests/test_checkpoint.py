@@ -1,6 +1,7 @@
 """Saver tests: safetensors roundtrip, sharded save/restore, atomic commit,
 async save, elastic re-shard, GC — DESIGN.md §8 checkpoint/restart."""
 import json
+import pathlib
 import threading
 
 import jax.numpy as jnp
@@ -80,3 +81,80 @@ class TestSaver:
         saver.save(tree, tmp_path, step=1)
         out = saver.restore(tmp_path, tree)
         np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+class TestCrashConsistency:
+    """The torn-write regression suite (DESIGN.md §13): a crash at ANY
+    point of a save must leave the directory either at the previous
+    committed checkpoint or the new one — never at neither."""
+
+    def test_file_writes_are_atomic(self, tmp_path):
+        """write_bytes_atomic never exposes a partial file at the final
+        path, even when the write itself dies."""
+        target = tmp_path / "blob.bin"
+        st_io.write_bytes_atomic(b"first", target)
+        assert target.read_bytes() == b"first"
+
+        class Dead(bytes):
+            pass
+        real_open = open
+
+        def torn_open(p, *a, **k):
+            f = real_open(p, *a, **k)
+            if str(p).endswith(".tmp"):
+                real_write = f.write
+                def die(data):
+                    real_write(data[: len(data) // 2])
+                    raise OSError("injected: disk died mid-write")
+                f.write = die
+            return f
+
+        import builtins
+        orig = builtins.open
+        builtins.open = torn_open
+        try:
+            with pytest.raises(OSError, match="injected"):
+                st_io.write_bytes_atomic(b"second-longer-payload", target)
+        finally:
+            builtins.open = orig
+        # final path untouched; only the temp carries the torn bytes
+        assert target.read_bytes() == b"first"
+
+    def test_uncommitted_dirs_are_invisible(self, tmp_path, rng):
+        """latest_step only trusts dirs with a manifest.json: a dir torn
+        mid-commit (no manifest) and stale .tmp leftovers are ignored,
+        and the next save sweeps them."""
+        (tmp_path / ".tmp_step_0000000001_123").mkdir()
+        torn = tmp_path / "step_0000000009"
+        torn.mkdir()
+        (torn / "shard_0_of_1.safetensors").write_bytes(b"half a shard")
+        assert saver.latest_step(tmp_path) is None
+        saver.save(_tree(rng), tmp_path, step=3, n_shards=1)
+        assert saver.latest_step(tmp_path) == 3
+        assert not list(tmp_path.glob(".tmp_step_*"))
+
+    def test_resave_never_destroys_the_live_checkpoint(self, tmp_path, rng,
+                                                       monkeypatch):
+        """Re-saving an existing step moves the old dir ASIDE before the
+        commit rename (never rmtree-first): a crash at the commit leaves
+        the old payload intact on disk."""
+        tree = _tree(rng)
+        saver.save(tree, tmp_path, step=1, n_shards=1)
+        orig_rename = pathlib.Path.rename
+
+        def boom(self, target):
+            if self.name.startswith(".tmp_step_"):
+                raise OSError("injected: crash at commit rename")
+            return orig_rename(self, target)
+
+        monkeypatch.setattr(pathlib.Path, "rename", boom)
+        with pytest.raises(OSError, match="injected"):
+            saver.save(tree, tmp_path, step=1, n_shards=1)
+        monkeypatch.undo()
+        survivors = list(tmp_path.glob(".trash_step_0000000001_*"))
+        assert survivors and (survivors[0] / "manifest.json").exists()
+        # the next healthy save commits and sweeps the corpse dirs
+        saver.save(tree, tmp_path, step=2, n_shards=1)
+        assert saver.latest_step(tmp_path) == 2
+        assert not list(tmp_path.glob(".trash_step_*"))
+        assert not list(tmp_path.glob(".tmp_step_*"))

@@ -1,0 +1,451 @@
+"""Fault-tolerance subsystem tests (DESIGN.md §13): dirty-row tracking,
+the core write_log seam, crash-consistent manifest chains, chain replay
+semantics, chaos scheduling, and the DeltaCheckpointer's base/delta
+policy on a real engine."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from ft_harness import (
+    GROUP, FakeTrainer, assert_rows_equal, build_engine,
+)
+from repro import obs
+from repro.checkpoint import safetensors_io as st_io
+from repro.core import write_log
+from repro.ft import (
+    ChaosIO, ChaosSchedule, DeltaCheckpointer, DirtyTracker, InjectedCrash,
+    StepChaos,
+)
+from repro.ft import manifest as manifest_lib
+from repro.ft import recovery as recovery_lib
+from repro.ft.manifest import FileIO, Manifest
+
+
+def _reg():
+    return obs.MetricsRegistry()
+
+
+def _io():
+    io = FileIO()
+    io.durable = False  # tests live in tmpdirs; skip fsync for speed
+    return io
+
+
+class TestDirtyTracker:
+    def test_mark_drain_reset(self):
+        t = DirtyTracker(registry=_reg())
+        t.mark("g", np.array([3, 1, 2, 1]))
+        assert t.pending() == 3
+        iv = t.drain()
+        np.testing.assert_array_equal(iv.dirty["g"], [1, 2, 3])
+        assert iv.n_dirty() == 3 and iv.n_dead() == 0
+        assert t.pending() == 0
+        again = t.drain()
+        assert again.n_dirty() == 0 and again.n_dead() == 0
+
+    def test_dirty_and_dead_are_mutually_exclusive(self):
+        t = DirtyTracker(registry=_reg())
+        t.mark("g", np.array([1, 2]))
+        t.mark_dead("g", np.array([2, 3]))  # 2 dies AFTER its write
+        iv = t.drain()
+        np.testing.assert_array_equal(iv.dirty["g"], [1])
+        np.testing.assert_array_equal(iv.dead["g"], [2, 3])
+        t.mark_dead("g", np.array([7]))
+        t.mark("g", np.array([7]))          # re-insert revives 7
+        iv = t.drain()
+        np.testing.assert_array_equal(iv.dirty["g"], [7])
+        assert "g" not in iv.dead
+
+    def test_merge_back_keeps_newer_events(self):
+        """Undoing a failed save must not clobber marks recorded since
+        the drain — those are newer truths about the rows."""
+        t = DirtyTracker(registry=_reg())
+        t.mark("g", np.array([1, 2]))
+        t.mark_dead("g", np.array([9]))
+        iv = t.drain()
+        t.mark_dead("g", np.array([1]))  # 1 died after the drain
+        t.mark("g", np.array([9]))       # 9 came back after the drain
+        t.merge_back(iv)
+        iv2 = t.drain()
+        np.testing.assert_array_equal(iv2.dirty["g"], [2, 9])
+        np.testing.assert_array_equal(iv2.dead["g"], [1])
+
+
+class _Recorder:
+    def __init__(self):
+        self.marks, self.dead, self.written = [], [], []
+
+    def mark(self, group, ids):
+        self.marks.append((group, np.asarray(ids).tolist()))
+
+    def mark_dead(self, group, ids):
+        self.dead.append((group, np.asarray(ids).tolist()))
+
+    def count_written(self, group, n):
+        self.written.append((group, int(n)))
+
+
+class TestWriteLogSeam:
+    @pytest.fixture
+    def rec(self):
+        r = _Recorder()
+        prev = write_log.set_observer(r)
+        yield r
+        write_log.set_observer(prev)
+
+    def test_insert_marks_only_new_non_pad_ids(self, rec):
+        with write_log.shard_scope(GROUP):
+            write_log.note_insert(np.array([5, -1, 7, 8]),
+                                  np.array([True, True, False, True]))
+        assert rec.marks == [(GROUP, [5, 8])]
+
+    def test_remove_evict_and_written(self, rec):
+        with write_log.shard_scope(GROUP):
+            write_log.note_remove(np.array([4, 6]), np.array([True, False]))
+            write_log.note_evict(np.array([11, -1]))
+            write_log.note_rows_written(np.array([True, True, False]))
+        assert rec.marks == [(GROUP, [4])]
+        assert rec.dead == [(GROUP, [11])]
+        assert rec.written == [(GROUP, 2)]
+
+    def test_without_scope_or_observer_nothing_records(self, rec):
+        write_log.note_insert(np.array([5]), np.array([True]))  # no scope
+        write_log.set_observer(None)
+        with write_log.shard_scope(GROUP):                      # no observer
+            write_log.note_insert(np.array([5]), np.array([True]))
+        assert rec.marks == []
+
+    def test_traced_values_are_inert(self, rec):
+        """Inside a jit trace the seam must be a no-op: abstract values,
+        and the traced computation replays without Python."""
+        @jax.jit
+        def f(ids):
+            with write_log.shard_scope(GROUP):
+                write_log.note_insert(ids, ids >= 0)
+                write_log.note_evict(ids)
+                write_log.note_rows_written(ids >= 0)
+            return ids * 2
+        np.testing.assert_array_equal(f(jnp.array([1, 2])), [2, 4])
+        assert rec.marks == [] and rec.dead == [] and rec.written == []
+
+
+def _commit(d, io, seq, step, kind, tensors, parent=None, parent_sha=None,
+            depth=0, cursor=None):
+    """Write one single-shard frame + its manifest, return (man, sha)."""
+    name = f"{manifest_lib.FRAME_PREFIX}{seq:08d}_0of1.safetensors"
+    nbytes, digest = io.write_frame(d / name, tensors)
+    man = Manifest(seq=seq, step=step, kind=kind,
+                   frames=[{"file": name, "nbytes": nbytes,
+                            "sha256": digest}],
+                   parent=parent, parent_sha256=parent_sha,
+                   chain_depth=depth, cursor=cursor)
+    return man, manifest_lib.commit(d, man, io)
+
+
+def _payload(val):
+    return {"x": np.full((4,), val, np.float32)}
+
+
+class TestManifestChain:
+    def test_commit_and_load_roundtrip(self, tmp_path):
+        io = _io()
+        m1, s1 = _commit(tmp_path, io, 1, 10, "base", _payload(1),
+                         cursor={"file": 3, "row": 40})
+        m2, s2 = _commit(tmp_path, io, 2, 20, "delta", _payload(2),
+                         parent=m1.name, parent_sha=s1, depth=1)
+        m3, _ = _commit(tmp_path, io, 3, 30, "delta", _payload(3),
+                        parent=m2.name, parent_sha=s2, depth=2)
+        chain = manifest_lib.load_chain(tmp_path)
+        assert [m.seq for m in chain] == [1, 2, 3]      # base-first
+        assert chain[-1].step == 30
+        assert chain[0].cursor == {"file": 3, "row": 40}
+
+    def test_head_is_a_hint_not_an_authority(self, tmp_path):
+        io = _io()
+        _commit(tmp_path, io, 1, 10, "base", _payload(1))
+        head = tmp_path / manifest_lib.HEAD_NAME
+        head.write_text("garbage not-a-hash\n")       # torn/corrupt HEAD
+        chain = manifest_lib.load_chain(tmp_path)
+        assert chain is not None and chain[-1].step == 10
+        head.unlink()                                  # missing HEAD
+        chain = manifest_lib.load_chain(tmp_path)
+        assert chain is not None and chain[-1].step == 10
+
+    def test_torn_frame_degrades_to_previous_chain(self, tmp_path):
+        io = _io()
+        m1, s1 = _commit(tmp_path, io, 1, 10, "base", _payload(1))
+        m2, _ = _commit(tmp_path, io, 2, 20, "base", _payload(2),
+                        parent=m1.name, parent_sha=s1)
+        frame2 = tmp_path / m2.frames[0]["file"]
+        frame2.write_bytes(frame2.read_bytes()[:10])   # torn shard
+        chain = manifest_lib.load_chain(tmp_path)
+        assert [m.step for m in chain] == [10]
+
+    def test_parent_hash_mismatch_breaks_the_chain(self, tmp_path):
+        io = _io()
+        m1, _ = _commit(tmp_path, io, 1, 10, "base", _payload(1))
+        _commit(tmp_path, io, 2, 20, "delta", _payload(2),
+                parent=m1.name, parent_sha="0" * 64, depth=1)
+        chain = manifest_lib.load_chain(tmp_path)
+        assert [m.step for m in chain] == [10]
+
+    def test_garbage_manifest_is_skipped(self, tmp_path):
+        io = _io()
+        _commit(tmp_path, io, 1, 10, "base", _payload(1))
+        io.write_manifest(
+            tmp_path / f"{manifest_lib.MANIFEST_PREFIX}00000009.json",
+            b"{ not json")
+        chain = manifest_lib.load_chain(tmp_path)
+        assert chain is not None and chain[-1].step == 10
+
+    def test_empty_directory_has_no_chain(self, tmp_path):
+        assert manifest_lib.load_chain(tmp_path) is None
+        with pytest.raises(FileNotFoundError):
+            recovery_lib.recover(tmp_path, build_engine())
+
+    def test_gc_keeps_the_live_window_and_sweeps_the_rest(self, tmp_path):
+        io = _io()
+        m1, s1 = _commit(tmp_path, io, 1, 10, "base", _payload(1))
+        m2, s2 = _commit(tmp_path, io, 2, 20, "delta", _payload(2),
+                         parent=m1.name, parent_sha=s1, depth=1)
+        m3, s3 = _commit(tmp_path, io, 3, 30, "base", _payload(3),
+                         parent=m2.name, parent_sha=s2)
+        orphan = tmp_path / f"{manifest_lib.FRAME_PREFIX}00000099_0of1.safetensors"
+        orphan.write_bytes(b"torn leftover from a crashed save")
+        (tmp_path / "whatever.tmp").write_bytes(b"staging remnant")
+        # keep_chains=2: both chains stay; only the garbage goes
+        deleted = manifest_lib.gc(tmp_path, io, keep_chains=2)
+        assert orphan.name in deleted and "whatever.tmp" in deleted
+        for m in (m1, m2, m3):
+            assert (tmp_path / m.name).exists()
+            assert (tmp_path / m.frames[0]["file"]).exists()
+        # keep_chains=1: chain 1 (m1+m2) becomes garbage, chain 2 stays
+        deleted = manifest_lib.gc(tmp_path, io, keep_chains=1)
+        assert m1.name in deleted and m2.name in deleted
+        assert (tmp_path / m3.name).exists()
+        assert (tmp_path / m3.frames[0]["file"]).exists()
+        assert manifest_lib.load_chain(tmp_path)[-1].step == 30
+
+    def test_gc_without_loadable_chain_deletes_nothing(self, tmp_path):
+        io = _io()
+        m1, _ = _commit(tmp_path, io, 1, 10, "base", _payload(1))
+        frame = tmp_path / m1.frames[0]["file"]
+        frame.write_bytes(frame.read_bytes()[:8])   # now nothing loads
+        assert manifest_lib.load_chain(tmp_path) is None
+        assert manifest_lib.gc(tmp_path, io) == []
+        assert frame.exists() and (tmp_path / m1.name).exists()
+
+
+class TestReplay:
+    def _rows(self, ids, val):
+        ids = np.asarray(ids, np.int64)
+        n = ids.size
+        return {"g/ids": ids,
+                "g/emb": np.full((n, 2), val, np.float32),
+                "g/slots/m": np.full((n, 2), val + 0.5, np.float32),
+                "g/last_use": np.full((n,), int(val), np.int32),
+                "__dense__/w": np.array([val], np.float32)}
+
+    def _chain3(self, tmp_path, io):
+        """base{1,2,3}@v1 → delta{1@v2, dead 2} → delta{2@v3} (resurrect)."""
+        t2 = self._rows([1], 2.0)
+        t2["g/dead"] = np.array([2], np.int64)
+        m1, s1 = _commit(tmp_path, io, 1, 10, "base", self._rows([1, 2, 3], 1.0))
+        m2, s2 = _commit(tmp_path, io, 2, 20, "delta", t2,
+                         parent=m1.name, parent_sha=s1, depth=1)
+        _commit(tmp_path, io, 3, 30, "delta", self._rows([2], 3.0),
+                parent=m2.name, parent_sha=s2, depth=2)
+        return manifest_lib.load_chain(tmp_path)
+
+    def test_tombstones_overwrites_and_resurrection(self, tmp_path):
+        chain = self._chain3(tmp_path, _io())
+        rows, dense, n_files = recovery_lib.replay_rows(tmp_path, chain)
+        g = rows["g"]
+        np.testing.assert_array_equal(g["ids"], [1, 2, 3])
+        # 1 → newest write (delta 1); 2 → tombstoned then resurrected
+        # (delta 2); 3 → untouched since the base
+        np.testing.assert_array_equal(g["emb"][:, 0], [2.0, 3.0, 1.0])
+        np.testing.assert_array_equal(g["slots"]["m"][:, 0], [2.5, 3.5, 1.5])
+        np.testing.assert_array_equal(g["last_use"], [2, 3, 1])
+        np.testing.assert_array_equal(dense["w"], [3.0])  # newest frame wins
+        assert n_files == 3
+
+    def test_any_prefix_is_a_consistent_view(self, tmp_path):
+        """Replaying chain[:k] is exactly the state at save k — the
+        per-prefix half of the §13 recovery invariant."""
+        chain = self._chain3(tmp_path, _io())
+        rows, dense, _ = recovery_lib.replay_rows(tmp_path, chain[:2])
+        g = rows["g"]
+        np.testing.assert_array_equal(g["ids"], [1, 3])   # 2 is dead here
+        np.testing.assert_array_equal(g["emb"][:, 0], [2.0, 1.0])
+        np.testing.assert_array_equal(dense["w"], [2.0])
+        rows, dense, _ = recovery_lib.replay_rows(tmp_path, chain[:1])
+        np.testing.assert_array_equal(rows["g"]["ids"], [1, 2, 3])
+        np.testing.assert_array_equal(dense["w"], [1.0])
+
+
+class TestChaosSchedule:
+    def test_parse_roundtrip(self):
+        spec = ("crash@frame:3,torn@frame:5,crash@manifest:2,"
+                "crash@head:1,sigterm@step:7")
+        s = ChaosSchedule.parse(spec)
+        assert str(s) == spec
+        assert [e.site for e in s.io_events()] == ["frame", "frame",
+                                                   "manifest", "head"]
+        assert [str(e) for e in s.step_events()] == ["sigterm@step:7"]
+
+    @pytest.mark.parametrize("bad", [
+        "torn@manifest:1",   # torn only makes sense for frames
+        "sigterm@frame:1",   # sigterm fires at steps
+        "explode@frame:1", "crash@disk:1", "crash@frame:0",
+        "crash@frame", "frame:1",
+    ])
+    def test_invalid_events_rejected(self, bad):
+        with pytest.raises(ValueError):
+            ChaosSchedule.parse(bad)
+
+    def test_seeded_is_deterministic_and_well_formed(self):
+        a = ChaosSchedule.seeded(7)
+        b = ChaosSchedule.seeded(7)
+        assert str(a) == str(b)
+        assert a.events[0].action == "torn" and a.events[0].site == "frame"
+        assert all(1 <= e.n <= 8 for e in a.events)
+        pairs = [(e.site, e.n) for e in a.events]
+        assert len(set(pairs)) == len(pairs)      # deduped call sites
+        assert str(ChaosSchedule.seeded(8)) != str(a)
+
+    def test_step_chaos_fires_each_event_once(self):
+        sc = StepChaos(ChaosSchedule.parse("crash@step:3"))
+        sc.on_step(1)
+        sc.on_step(2)
+        with pytest.raises(InjectedCrash):
+            sc.on_step(3)
+        sc.on_step(3)   # lifetime semantics: already fired
+        assert [str(e) for e in sc.fired] == ["crash@step:3"]
+
+    def test_sigterm_goes_through_os_kill(self, monkeypatch):
+        calls = []
+        monkeypatch.setattr(os, "kill", lambda pid, sig: calls.append((pid, sig)))
+        sc = StepChaos(ChaosSchedule.parse("sigterm@step:2"))
+        sc.on_step(2)
+        assert calls == [(os.getpid(), signal.SIGTERM)]
+
+    def test_chaos_io_counts_and_injects(self, tmp_path):
+        io = ChaosIO(ChaosSchedule.parse("crash@frame:2,torn@frame:3"))
+        t = {"x": np.zeros(64, np.float32)}
+        io.write_frame(tmp_path / "a.st", t)              # 1: clean
+        with pytest.raises(InjectedCrash):
+            io.write_frame(tmp_path / "b.st", t)          # 2: crash, no file
+        assert not (tmp_path / "b.st").exists()
+        with pytest.raises(InjectedCrash):
+            io.write_frame(tmp_path / "c.st", t)          # 3: TORN at final path
+        torn = (tmp_path / "c.st").read_bytes()
+        assert 0 < len(torn) < len((tmp_path / "a.st").read_bytes())
+        with pytest.raises(Exception):
+            st_io.load_file(tmp_path / "c.st")
+        io.write_frame(tmp_path / "d.st", t)              # 4: schedule drained
+        assert io.counts["frame"] == 4
+        assert [str(e) for e in io.fired] == ["crash@frame:2", "torn@frame:3"]
+
+
+class TestDeltaCheckpointer:
+    def _setup(self, tmp_path, io=None, **kw):
+        tracker = DirtyTracker(registry=_reg())
+        tr = FakeTrainer(build_engine(), tracker)
+        ck = DeltaCheckpointer(tmp_path, tr.engine, tracker,
+                               registry=_reg(), io=io or _io(), **kw)
+        return tr, ck
+
+    def test_base_delta_and_depth_compaction_policy(self, tmp_path):
+        tr, ck = self._setup(tmp_path, max_chain_depth=2,
+                             compact_dirty_fraction=2.0, n_shards=2)
+        kinds = []
+        for s in range(1, 9):
+            tr.train_step()
+            if s % 2 == 0:
+                kinds.append(ck.save(tr.full_state(), s).kind)
+        # first save has no chain; then deltas until depth would exceed 2
+        assert kinds == ["base", "delta", "delta", "base"]
+        assert ck.chain[-1].chain_depth == 0
+
+    def test_high_dirty_fraction_forces_compaction(self, tmp_path):
+        tr, ck = self._setup(tmp_path, compact_dirty_fraction=0.5)
+        for _ in range(6):
+            tr.train_step()
+        assert ck.save(tr.full_state(), tr.step).kind == "base"
+        tr.train_step()
+        assert ck.save(tr.full_state(), tr.step).kind == "delta"
+        # touch every live row: a delta would cost a base anyway
+        rows = tr.engine.export_rows(tr.state)
+        tr.tracker.mark(GROUP, rows[GROUP]["ids"])
+        assert ck.save(tr.full_state(), tr.step).kind == "base"
+
+    def test_failed_save_merges_the_interval_back(self, tmp_path):
+        io = ChaosIO(ChaosSchedule.parse("crash@frame:1"))
+        tr, ck = self._setup(tmp_path, io=io)
+        tr.train_step()
+        before = tracker_pending = ck.tracker.pending()
+        assert before > 0
+        with pytest.raises(InjectedCrash):
+            ck.save(tr.full_state(), 1)
+        assert ck.tracker.pending() == tracker_pending  # nothing lost
+        man = ck.save(tr.full_state(), 1)               # retry lands
+        assert man.kind == "base"
+        assert ck.tracker.pending() == 0
+        e2 = build_engine()
+        ck2 = DeltaCheckpointer(tmp_path, e2, DirtyTracker(registry=_reg()),
+                                registry=_reg(), io=_io())
+        res = ck2.recover(like_state=FakeTrainer(e2).full_state())
+        assert res.step == 1
+        assert_rows_equal(e2.export_rows(res.state["sparse"]),
+                          tr.engine.export_rows(tr.state))
+
+    def test_roundtrip_resume_is_idempotent_and_elastic(self, tmp_path):
+        tr, ck = self._setup(tmp_path, max_chain_depth=4, n_shards=2,
+                             compact_dirty_fraction=2.0)
+        for s in range(1, 7):
+            tr.train_step()
+            if s % 2 == 0:
+                ck.save(tr.full_state(), s)
+        want = tr.engine.export_rows(tr.state)
+        for n_dev in (1, 2):       # same shard count, then elastic reshard
+            e2 = build_engine(n_devices=n_dev)
+            ck2 = DeltaCheckpointer(tmp_path, e2,
+                                    DirtyTracker(registry=_reg()),
+                                    registry=_reg(), io=_io())
+            assert ck2.has_chain()
+            res = ck2.recover(like_state=FakeTrainer(e2).full_state())
+            res2 = ck2.recover(like_state=FakeTrainer(e2).full_state())
+            assert res.step == res2.step == 6
+            assert res.cursor == res2.cursor
+            assert_rows_equal(e2.export_rows(res.state["sparse"]), want)
+            assert_rows_equal(e2.export_rows(res2.state["sparse"]), want)
+            np.testing.assert_array_equal(res.state["dense"]["w"],
+                                          np.full((3,), 6.0, np.float32))
+        # recovered-then-continued training matches the uninterrupted run
+        e3 = build_engine()
+        tracker3 = DirtyTracker(registry=_reg())
+        ck3 = DeltaCheckpointer(tmp_path, e3, tracker3,
+                                registry=_reg(), io=_io(),
+                                compact_dirty_fraction=2.0)
+        tr3 = FakeTrainer(e3, tracker3)
+        tr3.adopt(ck3.recover(like_state=tr3.full_state()))
+        for _ in range(2):
+            tr.train_step()
+            tr3.train_step()
+        assert_rows_equal(e3.export_rows(tr3.state),
+                          tr.engine.export_rows(tr.state))
+
+    def test_cursor_rides_the_manifest(self, tmp_path):
+        tr, ck = self._setup(tmp_path)
+        tr.train_step()
+        ck.save(tr.full_state(), 1, cursor={"file": 2, "row": 17})
+        e2 = build_engine()
+        ck2 = DeltaCheckpointer(tmp_path, e2, DirtyTracker(registry=_reg()),
+                                registry=_reg(), io=_io())
+        res = ck2.recover(like_state=FakeTrainer(e2).full_state())
+        assert res.cursor == {"file": 2, "row": 17}

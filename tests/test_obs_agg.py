@@ -127,6 +127,31 @@ class TestSnapshotMerge:
         with pytest.raises(ValueError, match="version"):
             RegistrySnapshot.from_json(obj)
 
+    def test_v1_payload_reads_as_epoch_zero(self):
+        """Compat: a v1 snapshot (no epoch field) parses, normalizes to
+        the current version, and merges with v2 snapshots."""
+        s = _snap(_worker_registry(0), "w0")
+        obj = s.to_json()
+        obj["v"] = 1
+        del obj["epoch"]
+        old = RegistrySnapshot.from_json(json.dumps(obj))
+        assert old.version == SNAPSHOT_VERSION
+        assert old.epoch == 0
+        v2 = RegistrySnapshot.capture(_worker_registry(1), worker="w1",
+                                      t=2.0, epoch=37)
+        merged = merge_snapshots([old, v2])
+        assert merged.epoch == 37          # max-semilattice over epochs
+        assert merged.counter_value("trainer/steps") == 200
+
+    def test_epoch_serializes_and_roundtrips(self):
+        s = RegistrySnapshot.capture(_worker_registry(0), worker="w0",
+                                     t=1.0, epoch=12)
+        obj = s.to_json()
+        assert obj["v"] == SNAPSHOT_VERSION and obj["epoch"] == 12
+        again = RegistrySnapshot.from_json(s.to_json_str())
+        assert again.epoch == 12
+        assert again.to_json_str() == s.to_json_str()
+
     def test_merge_permutation_invariant_bit_identical(self):
         """Acceptance: every association/permutation of the 3 worker
         snapshots serializes to the same bytes."""
@@ -489,6 +514,59 @@ class TestAggregator:
         assert not agg.ingest({"type": "snapshot"})              # no payload
         assert not agg.ingest({"type": "snapshot", "snapshot": {"v": 99}})
         assert agg.workers == []
+
+    def test_restarted_worker_epochs_sum(self):
+        """A preempted worker's counters reset at restart; its pre- and
+        post-restart snapshots carry different epochs and must SUM —
+        keeping only the newest would erase the first incarnation's
+        work (DESIGN.md §13)."""
+        agg = obs.TelemetryAggregator()
+
+        def snap(epoch, steps, t):
+            reg = obs.MetricsRegistry()
+            reg.counter("trainer/steps").inc(steps)
+            reg.gauge("trainer/last_step").set(float(steps + epoch))
+            return RegistrySnapshot.capture(reg, worker="w0", t=t,
+                                            epoch=epoch)
+
+        # epoch 0: two snapshots, the newer replaces the older (same
+        # stream — its counters are cumulative)
+        assert agg.ingest({"type": "snapshot", "worker": "w0",
+                           "snapshot": snap(0, 30, t=1.0).to_json()})
+        assert agg.ingest({"type": "snapshot", "worker": "w0",
+                           "snapshot": snap(0, 50, t=2.0).to_json()})
+        assert agg.merged().counter_value("trainer/steps") == 50
+        # crash; resume at step 50 → epoch 50, counters restart from 0
+        assert agg.ingest({"type": "snapshot", "worker": "w0",
+                           "snapshot": snap(50, 25, t=3.0).to_json()})
+        m = agg.merged()
+        assert m.counter_value("trainer/steps") == 75  # 50 + 25, not 25
+        # gauges still last-writer (the live incarnation's view)
+        assert m.metrics["trainer/last_step"]["value"] == 75.0
+        # one worker, two incarnations
+        assert agg.workers == ["w0"]
+
+    def test_per_worker_view_merges_epochs(self, tmp_path):
+        """Straggler attribution sees one lifetime stream per worker:
+        a worker that restarted contributes its merged histograms, and
+        agg/workers counts hosts, not incarnations."""
+        agg = obs.TelemetryAggregator()
+        for worker, epoch, slow, t in (("w0", 0, 1.0, 1.0),
+                                       ("w0", 40, 1.0, 2.0),
+                                       ("w1", 0, 4.0, 1.0)):
+            reg = _worker_registry(0, slow=slow)
+            snap = RegistrySnapshot.capture(reg, worker=worker, t=t,
+                                            epoch=epoch)
+            agg.ingest({"type": "snapshot", "worker": worker,
+                        "snapshot": snap.to_json()})
+        reg = agg.publish()
+        assert reg.gauge("agg/workers").value == 2
+        means = agg.phase_means()["device_step"]
+        assert set(means) == {"w0", "w1"}
+        assert means["w1"] == pytest.approx(4.0 * means["w0"], rel=0.1)
+        # w0's merged lifetime histogram spans both epochs (200 obs)
+        per = dict(agg._per_worker())
+        assert per["w0"].metrics["trace/device_step_s"]["count"] == 200
 
 
 # ---------------------------------------------------------------------------

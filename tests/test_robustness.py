@@ -192,3 +192,114 @@ class TestMBUModel:
         assert res.moved_bytes is not None
         assert res.bandwidth_intensity is not None
         assert res.bandwidth_intensity > 0.5  # elementwise ≈ roofline
+
+
+class TestCrashRecoveryMatrix:
+    """Delta-checkpoint crash matrix (DESIGN.md §13): a single injected
+    fault at each persistence site — mid shard write, torn shard write,
+    before the manifest commit, after the manifest but before HEAD — must
+    leave a chain that recovers bit-identical to the previous committed
+    save, and the restarted run must converge to the reference. Recovery
+    is additionally exercised onto a DIFFERENT device count (elastic)."""
+
+    CASES = [
+        ("crash@frame:3", 1),     # mid-shard: save 2's first frame dies
+        ("torn@frame:3", 2),      # torn shard AT the final path
+        ("crash@manifest:2", 1),  # frames landed, manifest never renamed
+        ("crash@head:2", 2),      # manifest committed, HEAD not updated
+    ]
+
+    @pytest.mark.parametrize("spec,d_recover", CASES)
+    def test_single_fault_recovers_bit_identical(self, tmp_path, spec,
+                                                 d_recover):
+        from ft_harness import (FakeTrainer, assert_rows_equal, build_engine,
+                                reference_run, run_chaos)
+        from repro import obs
+        from repro.ft import ChaosIO, ChaosSchedule, DeltaCheckpointer, \
+            DirtyTracker
+
+        total = 8
+        ref = reference_run(total)
+        io = ChaosIO(ChaosSchedule.parse(spec))
+        recovered, attempts, tr = run_chaos(
+            tmp_path, io, total_steps=total, save_every=2, ref=ref)
+        assert [str(e) for e in io.fired] == [spec]
+        # every fault lands during save@4; recovery falls back to save@2
+        assert recovered == [2]
+        assert_rows_equal(tr.engine.export_rows(tr.state), ref[total])
+        # elastic: recover the finished chain onto another device count
+        e2 = build_engine(n_devices=d_recover)
+        ck2 = DeltaCheckpointer(tmp_path, e2,
+                                DirtyTracker(registry=obs.MetricsRegistry()),
+                                registry=obs.MetricsRegistry())
+        res = ck2.recover(like_state=FakeTrainer(e2).full_state())
+        assert res.step == total
+        assert_rows_equal(e2.export_rows(res.state["sparse"]), ref[total])
+
+
+class TestChaosAcceptance:
+    """The §13 acceptance run: FIVE injected faults across one training
+    run — a crash before the first HEAD write, a mid-shard crash, a TORN
+    shard write during a COMPACTION save, a crash before a manifest
+    commit, and a late mid-shard crash — each followed by a restart.
+    At every crash point the recovered state must be bit-identical to an
+    uninterrupted reference at the recovered step (the invariant: any
+    prefix of a crash schedule recovers to a bit-identical model)."""
+
+    SPEC = ("crash@head:1,crash@frame:5,torn@frame:9,"
+            "crash@manifest:4,crash@frame:17")
+
+    def test_five_fault_schedule_recovers_bit_identical_everywhere(
+            self, tmp_path):
+        from ft_harness import (FakeTrainer, assert_rows_equal, build_engine,
+                                reference_run, run_chaos)
+        from repro import obs
+        from repro.ft import ChaosIO, ChaosSchedule, DeltaCheckpointer, \
+            DirtyTracker
+
+        total = 12
+        ref = reference_run(total)
+        io = ChaosIO(ChaosSchedule.parse(self.SPEC))
+        recovered, attempts, tr = run_chaos(
+            tmp_path, io, total_steps=total, save_every=2, ref=ref)
+        assert len(io.fired) == 5
+        assert sorted(str(e) for e in io.fired) == sorted(self.SPEC.split(","))
+        # crash@head:1 recovers via the manifest scan (no HEAD yet); the
+        # double 6 is the compaction save crashing twice (torn frame,
+        # then manifest) before landing on the third try
+        assert recovered == [2, 4, 6, 6, 10]
+        crashed = [(s, comp) for s, status, comp in attempts
+                   if status == "crashed"]
+        assert crashed == [(2, False), (6, False), (8, True), (8, True),
+                           (12, False)]
+        # the torn shard write fired during a compaction save
+        assert io.fired[2].action == "torn" and crashed[2][1]
+        # the survivor equals the uninterrupted run, and so does a fresh
+        # recovery of what it left on disk — on a resharded engine too
+        assert_rows_equal(tr.engine.export_rows(tr.state), ref[total])
+        for n_dev in (1, 2):
+            e2 = build_engine(n_devices=n_dev)
+            ck2 = DeltaCheckpointer(
+                tmp_path, e2, DirtyTracker(registry=obs.MetricsRegistry()),
+                registry=obs.MetricsRegistry())
+            res = ck2.recover(like_state=FakeTrainer(e2).full_state())
+            assert res.step == total
+            assert_rows_equal(e2.export_rows(res.state["sparse"]), ref[total])
+
+    @pytest.mark.parametrize("seed", [3, 11])
+    def test_seeded_schedules_always_converge(self, tmp_path, seed):
+        """Property sweep: ANY seeded schedule (torn frame guaranteed
+        first) must drive to completion with every recovery bit-identical
+        to the reference — no hand-placed crash points."""
+        from ft_harness import reference_run, run_chaos
+        from repro.ft import ChaosIO, ChaosSchedule
+
+        total = 12
+        ref = reference_run(total)
+        sched = ChaosSchedule.seeded(seed, n_events=4, max_count=10)
+        io = ChaosIO(sched)
+        recovered, _, tr = run_chaos(
+            tmp_path, io, total_steps=total, save_every=2, ref=ref)
+        assert io.fired, f"schedule {sched} never fired"
+        from ft_harness import assert_rows_equal
+        assert_rows_equal(tr.engine.export_rows(tr.state), ref[total])
